@@ -1,0 +1,63 @@
+"""Benchmark driver — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract), then a
+human-readable dump of each table. Roofline rows are appended when dry-run
+artifacts exist under results/dryrun.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import paper_tables  # noqa: E402
+
+
+def _run(name, fn):
+    t0 = time.time()
+    rows, derived = fn()
+    us = (time.time() - t0) * 1e6
+    print(f"{name},{us:.0f},{json.dumps(derived, default=str)}")
+    return rows, derived
+
+
+def main() -> None:
+    results = {}
+    for name, fn in [
+        ("table3_memory_rampup", paper_tables.table3_memory_rampup),
+        ("table4_memory_rampup_mini", paper_tables.table4_memory_rampup_mini),
+        ("accuracy_fp16_vs_fp32", paper_tables.accuracy_fp16_vs_fp32),
+        ("memory_fp16_halving", paper_tables.memory_fp16_halving),
+        ("table5_performance", paper_tables.table5_performance),
+    ]:
+        results[name] = _run(name, fn)
+
+    # roofline (requires dry-run artifacts)
+    try:
+        from benchmarks import roofline
+        rows = roofline.build_table()
+        if rows:
+            n_ok = sum(1 for r in rows if r.get("dominant") != "SKIPPED")
+            print(f"roofline_table,0,{json.dumps({'cells': n_ok})}")
+            results["roofline"] = rows
+    except Exception as e:  # dry-run not yet produced
+        print(f"roofline_table,0,{json.dumps({'error': str(e)})}")
+
+    print("\n=== detail ===")
+    for name, payload in results.items():
+        print(f"\n--- {name} ---")
+        rows = payload[0] if isinstance(payload, tuple) else payload
+        for r in rows:
+            print(" ", r)
+
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump({k: (v[0] if isinstance(v, tuple) else v)
+                   for k, v in results.items()}, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Real-time sizing (paper §III-B) across hardware targets.
+
+Reproduces the paper's finding — ~186 neurons run real-time on the RP2350's
+M33, compute-bound — and extends the same roofline model to a TPU v5e chip
+and a 256-chip pod, showing where the paper's fp16 storage moves the
+real-time boundary.
+
+  PYTHONPATH=src python examples/realtime_sizing.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.sizing import M33, V5E, realtime_sizing
+
+
+def main() -> None:
+    print(f"{'hardware':14s} {'chips':>5s} {'bytes/w':>8s} "
+          f"{'max_neurons':>12s}  bottleneck")
+    rows = [
+        ("MCU (paper)", M33, 1, 2, False),
+        ("MCU fp32", M33, 1, 4, False),
+        ("v5e chip fp16", V5E, 1, 2, True),
+        ("v5e chip fp32", V5E, 1, 4, True),
+        ("v5e pod fp16", V5E, 256, 2, True),
+    ]
+    for name, hw, chips, bw, dense in rows:
+        s = realtime_sizing(hw, chips=chips, fanin=60, bytes_per_weight=bw,
+                            dense_traversal=dense)
+        print(f"{name:14s} {chips:5d} {bw:8d} {s.max_neurons:12,d}  "
+              f"{s.bottleneck}")
+    print("\npaper: 186 neurons real-time on the M33 (compute-bound); "
+          "fp16 halves the memory term, which matters once fan-in or "
+          "rate grows (dense TPU traversal is memory-bound).")
+
+
+if __name__ == "__main__":
+    main()

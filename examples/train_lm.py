@@ -1,0 +1,40 @@
+"""End-to-end training driver example: pretrain a small LM with the paper's
+fp16-storage policy, checkpoints, and resume.
+
+Trains a ~10M-param SmolLM-family model for a few hundred steps on this CPU
+container (the identical driver runs the full 10 assigned configs on the
+production mesh — shardings come from the mesh argument). Demonstrates:
+loss descent under fp16 storage + f32 master, dynamic loss scaling,
+checkpoint/restart fault tolerance.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import dataclasses
+import tempfile
+
+from repro.configs import get_arch
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--policy", default="fp16")
+    args = ap.parse_args()
+
+    ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+    out = train("smollm-360m", reduced=True, steps=args.steps,
+                global_batch=8, seq_len=128, policy_name=args.policy,
+                ckpt_dir=ckpt, ckpt_interval=100, lr=3e-3)
+    print(f"\nloss: {out['first_loss']:.3f} -> {out['final_loss']:.3f} "
+          f"over {args.steps} steps (fp16 storage, f32 master)")
+    assert out["final_loss"] < out["first_loss"], "training must descend"
+    print(f"checkpoints in {ckpt}; rerun with the same dir to resume.")
+
+
+if __name__ == "__main__":
+    main()

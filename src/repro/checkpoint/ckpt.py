@@ -1,0 +1,87 @@
+"""Checkpoint/restore/resume + elastic re-sharding.
+
+Fault tolerance for the pod-scale runtime: training state is flattened to
+named leaves and written atomically (tmp + rename) every N steps; restart
+resumes from the latest step bitwise-identically (tested). ``reshard``
+re-lays a restored state out on a *different* mesh — the elastic-scaling
+path when a pod or host drops out.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "save_every", "reshard"]
+
+_SEP = "||"
+
+
+def _flatten(state) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = _SEP.join(str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, state) -> str:
+    """Atomic checkpoint write; returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:010d}.npz")
+    tmp = path + ".tmp"
+    flat = _flatten(state)
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)  # atomic on POSIX — no torn checkpoints
+    return path
+
+
+def restore(ckpt_dir: str, step: int, like):
+    """Restore into the structure of ``like`` (a pytree of arrays/specs)."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}.npz")
+    with np.load(path, allow_pickle=False) as data:
+        paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, ref in paths:
+            key = _SEP.join(str(x) for x in p)
+            arr = data[key]
+            dtype = getattr(ref, "dtype", None)
+            leaf = jnp.asarray(arr)
+            if dtype is not None and leaf.dtype != dtype:
+                leaf = leaf.astype(dtype)
+            leaves.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def save_every(ckpt_dir: str, step: int, state, *, interval: int,
+               keep_last: int = 3) -> str | None:
+    """Periodic checkpointing with retention."""
+    if step % interval:
+        return None
+    path = save(ckpt_dir, step, state)
+    steps = sorted(
+        int(m.group(1)) for f in os.listdir(ckpt_dir)
+        if (m := re.match(r"step_(\d+)\.npz$", f)))
+    for s in steps[:-keep_last]:
+        os.remove(os.path.join(ckpt_dir, f"step_{s:010d}.npz"))
+    return path
+
+
+def reshard(state, shardings):
+    """Elastic re-shard: lay ``state`` out per ``shardings`` (a pytree of
+    NamedShardings for the *new* mesh — possibly a different device count,
+    e.g. after losing a pod). ``device_put`` moves across device sets;
+    jit-identity cannot."""
+    return jax.device_put(state, shardings)

@@ -1,0 +1,31 @@
+"""SNN simulation core — the paper's contribution (CARLsim on JAX/TPU)."""
+from repro.core.engine import Engine, StepOutput, run, step
+from repro.core.network import (
+    CompiledNetwork,
+    NetParams,
+    NetState,
+    NetStatic,
+    NetworkBuilder,
+)
+from repro.core.neurons import (
+    NeuronModel,
+    NeuronParams,
+    NeuronState,
+    generator,
+    izh4,
+    izh9,
+    lif,
+    update_neurons,
+)
+from repro.core.plasticity import STDPConfig
+from repro.core.synapses import STPConfig
+
+__all__ = [
+    "Engine", "StepOutput", "run", "step",
+    "CompiledNetwork", "NetParams", "NetState", "NetStatic", "NetworkBuilder",
+    "NeuronModel", "NeuronParams", "NeuronState",
+    "generator", "izh4", "izh9", "lif", "update_neurons",
+    "STDPConfig", "STPConfig",
+]
+
+from repro.core.sizing import M33, V5E, HardwareSpec, realtime_sizing  # noqa: E402

@@ -1,0 +1,77 @@
+"""Conductance-based (COBA) synapses — CARLsim's ``setConductances(true)``.
+
+Four receptor channels with exponential decay; excitatory deliveries split
+AMPA/NMDA, inhibitory GABAa/GABAb. Current follows CARLsim's formulation
+(NMDA voltage dependence ((v+80)/60)² / (1 + ((v+80)/60)²)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["COBAConfig", "ConductanceState", "decay_and_deliver", "coba_current"]
+
+
+@dataclasses.dataclass(frozen=True)
+class COBAConfig:
+    tau_ampa: float = 5.0
+    tau_nmda: float = 150.0
+    tau_gabaa: float = 6.0
+    tau_gabab: float = 150.0
+    # Delivery split between fast/slow channels.
+    nmda_frac: float = 0.1
+    gabab_frac: float = 0.1
+    # Reversal potentials (mV)
+    e_exc: float = 0.0
+    e_gabaa: float = -70.0
+    e_gabab: float = -90.0
+
+
+class ConductanceState(NamedTuple):
+    g_ampa: jax.Array  # [N]
+    g_nmda: jax.Array
+    g_gabaa: jax.Array
+    g_gabab: jax.Array
+
+
+def init_conductance_state(n: int, dtype=jnp.float32) -> ConductanceState:
+    z = jnp.zeros((n,), dtype)
+    return ConductanceState(z, z, z, z)
+
+
+def decay_and_deliver(
+    cfg: COBAConfig,
+    state: ConductanceState,
+    exc_in: jax.Array,  # [N] f32 excitatory weight arriving this tick (≥0)
+    inh_in: jax.Array,  # [N] f32 inhibitory magnitude arriving this tick (≥0)
+    dt: float,
+) -> ConductanceState:
+    f32 = jnp.float32
+    ga = state.g_ampa.astype(f32) * jnp.exp(-dt / cfg.tau_ampa)
+    gn = state.g_nmda.astype(f32) * jnp.exp(-dt / cfg.tau_nmda)
+    gA = state.g_gabaa.astype(f32) * jnp.exp(-dt / cfg.tau_gabaa)
+    gB = state.g_gabab.astype(f32) * jnp.exp(-dt / cfg.tau_gabab)
+    ga = ga + (1.0 - cfg.nmda_frac) * exc_in
+    gn = gn + cfg.nmda_frac * exc_in
+    gA = gA + (1.0 - cfg.gabab_frac) * inh_in
+    gB = gB + cfg.gabab_frac * inh_in
+    dt_ = state.g_ampa.dtype
+    return ConductanceState(ga.astype(dt_), gn.astype(dt_), gA.astype(dt_), gB.astype(dt_))
+
+
+def coba_current(cfg: COBAConfig, state: ConductanceState, v: jax.Array) -> jax.Array:
+    """Total synaptic current (f32) given membrane potential v [N]."""
+    f32 = jnp.float32
+    v = v.astype(f32)
+    nv = (v + 80.0) / 60.0
+    nmda_gate = nv * nv / (1.0 + nv * nv)
+    i = -(
+        state.g_ampa.astype(f32) * (v - cfg.e_exc)
+        + state.g_nmda.astype(f32) * nmda_gate * (v - cfg.e_exc)
+        + state.g_gabaa.astype(f32) * (v - cfg.e_gabaa)
+        + state.g_gabab.astype(f32) * (v - cfg.e_gabab)
+    )
+    return i

@@ -1,0 +1,196 @@
+"""Simulation engine: pure 1 ms-tick step function + ``lax.scan`` runner.
+
+The MCU runs a host loop at the wall clock; on TPU the same tick semantics
+are expressed as a pure function scanned over time. Order of operations per
+tick follows CARLsim's kernel:
+
+  1. read the delay-ring slot for tick t (currents that arrive now)
+  2. CUBA: current = signed slot; COBA: decay conductances, add deliveries,
+     derive current from (g, v)
+  3. integrate neuron dynamics (Euler/RK4 substeps), detect + reset spikes
+  4. draw generator (Poisson) spikes
+  5. propagate spikes through every projection into slot (t + delay) mod D,
+     scaling by STP where enabled  — fp16 weights, f32 matmul
+  6. STDP / DA-STDP trace + weight updates
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import neurons as nrn
+from repro.core.conductance import coba_current, decay_and_deliver
+from repro.core.network import CompiledNetwork, NetParams, NetState, NetStatic
+from repro.core.plasticity import da_stdp_step, stdp_step
+from repro.core.synapses import propagate, stp_update
+
+__all__ = ["StepOutput", "step", "run", "Engine"]
+
+
+class StepOutput(NamedTuple):
+    spikes: jax.Array  # [N] bool
+    v: jax.Array  # [N] f32 membrane potential after update
+    i_syn: jax.Array  # [N] f32 synaptic current delivered this tick
+
+
+def step(
+    static: NetStatic,
+    params: NetParams,
+    state: NetState,
+    i_ext: jax.Array | None = None,
+    dopamine: jax.Array | None = None,
+) -> tuple[NetState, StepOutput]:
+    """One 1 ms tick. Pure; jit/scan-friendly."""
+    f32 = jnp.float32
+    t = state.t
+    key, k_gen = jax.random.split(state.key)
+    slot = jnp.mod(t, static.ring_len)
+
+    # 1–2: delivery
+    deliver = jax.lax.dynamic_index_in_dim(state.ring, slot, axis=0, keepdims=False)
+    deliver = deliver.astype(f32)  # [N, C]
+    ring = jax.lax.dynamic_update_index_in_dim(
+        state.ring, jnp.zeros_like(deliver).astype(state.ring.dtype), slot, axis=0
+    )
+    cond = state.cond
+    if static.coba is not None:
+        cond = decay_and_deliver(static.coba, cond, deliver[:, 0], deliver[:, 1], static.dt)
+        i_syn = coba_current(static.coba, cond, state.neurons.v)
+    else:
+        i_syn = deliver[:, 0]
+    if i_ext is not None:
+        i_syn = i_syn + i_ext.astype(f32)
+
+    # 3: neuron dynamics
+    new_neurons, spiked = nrn.update_neurons(
+        params.neuron, state.neurons, i_syn,
+        dt=static.dt, substeps=static.substeps, method=static.method,
+        state_dtype=state.neurons.v.dtype,
+    )
+
+    # 4: Poisson generators (rate in Hz -> p per tick); two-phase schedule:
+    # pulse rate during [0, until_ms), sustained rate after.
+    in_pulse = (t.astype(f32) * static.dt) < params.gen_until
+    rate = jnp.where(in_pulse, params.gen_rate, params.gen_rate_after)
+    p_fire = rate * (static.dt / 1000.0)
+    gen_spikes = jax.random.uniform(k_gen, (static.n,), dtype=f32) < p_fire
+    is_gen = params.neuron.model == nrn.NeuronModel.GENERATOR
+    spikes = jnp.where(is_gen, gen_spikes, spiked)
+
+    # 5: propagation into future ring slots
+    new_stp = []
+    for spec, w, stp_state in zip(static.projections, state.weights, state.stp):
+        contrib = propagate(spec, _proj(w), spikes, stp_state)  # [post] f32 signed
+        dslot = jnp.mod(t + spec.delay_ms, static.ring_len)
+        if static.ring_channels == 2:
+            ch = 0 if spec.receptor == "exc" else 1
+            contrib = jnp.abs(contrib)
+        else:
+            ch = 0
+        patch = jax.lax.dynamic_slice(
+            ring, (dslot, spec.post_start, ch), (1, spec.post_size, 1)
+        )
+        patch = patch + contrib.astype(ring.dtype)[None, :, None]
+        ring = jax.lax.dynamic_update_slice(ring, patch, (dslot, spec.post_start, ch))
+        if stp_state is not None:
+            pre_sp = spikes[spec.pre_slice]
+            new_stp.append(stp_update(spec.stp, stp_state, pre_sp, static.dt))
+        else:
+            new_stp.append(None)
+
+    # 6: plasticity
+    new_weights, new_stdp = [], []
+    da = dopamine if dopamine is not None else jnp.float32(0.0)
+    for spec, cfg, w, tr, mask in zip(
+        static.projections, static.stdp, state.weights, state.stdp, params.masks
+    ):
+        if cfg is None:
+            new_weights.append(w)
+            new_stdp.append(None)
+            continue
+        pre_sp = spikes[spec.pre_slice]
+        post_sp = spikes[spec.post_slice]
+        if cfg.tau_elig is not None:
+            tr2, w2 = da_stdp_step(cfg, tr, w, mask, pre_sp, post_sp, da, static.dt)
+        else:
+            tr2, w2 = stdp_step(cfg, tr, w, mask, pre_sp, post_sp, static.dt)
+        new_weights.append(w2)
+        new_stdp.append(tr2)
+
+    new_state = NetState(
+        t=t + 1, key=key, neurons=new_neurons, ring=ring,
+        weights=tuple(new_weights), stp=tuple(new_stp), stdp=tuple(new_stdp),
+        cond=cond,
+    )
+    out = StepOutput(
+        spikes=spikes, v=new_neurons.v.astype(f32), i_syn=i_syn
+    )
+    return new_state, out
+
+
+def _proj(w: jax.Array):
+    from repro.core.synapses import ProjectionParams
+
+    return ProjectionParams(weight=w, mask=None)
+
+
+@partial(jax.jit, static_argnames=("static", "n_steps", "record_v", "record_i"))
+def run(
+    static: NetStatic,
+    params: NetParams,
+    state: NetState,
+    n_steps: int,
+    *,
+    i_ext: jax.Array | None = None,  # [T, N] optional external current
+    dopamine: jax.Array | None = None,  # [T] optional DA schedule
+    record_v: bool = False,
+    record_i: bool = False,
+):
+    """Scan ``step`` for ``n_steps`` ticks; returns (state, outputs).
+
+    outputs.spikes: [T, N] bool raster (the paper's correctness metric is
+    total spike count over 1 s of model time).
+    """
+
+    ie_xs = i_ext if i_ext is not None else jnp.zeros((n_steps, 0), jnp.float32)
+    da_xs = (
+        dopamine.reshape(n_steps, 1)
+        if dopamine is not None
+        else jnp.zeros((n_steps, 0), jnp.float32)
+    )
+
+    def body_wrap(carry, xs):
+        ie, da = xs
+        ie = ie if ie.shape[-1] else None  # static shape: decided at trace time
+        da = da[0] if da.shape[-1] else None
+        new_state, out = step(static, params, carry, ie, da)
+        ys = (out.spikes, out.v if record_v else None, out.i_syn if record_i else None)
+        return new_state, ys
+
+    final, ys = jax.lax.scan(body_wrap, state, (ie_xs, da_xs), length=n_steps)
+    spikes, v, i = ys
+    outputs = {"spikes": spikes}
+    if record_v:
+        outputs["v"] = v
+    if record_i:
+        outputs["i_syn"] = i
+    return final, outputs
+
+
+@dataclasses.dataclass
+class Engine:
+    """Convenience wrapper binding a compiled network."""
+
+    net: CompiledNetwork
+
+    def run(self, n_steps: int, state: NetState | None = None, **kw):
+        state = state if state is not None else self.net.state0
+        return run(self.net.static, self.net.params, state, n_steps, **kw)
+
+    def spike_counts(self, n_steps: int, **kw) -> jax.Array:
+        _, out = self.run(n_steps, **kw)
+        return out["spikes"].sum(axis=0)

@@ -1,0 +1,69 @@
+"""Spike analysis — CARLsim's SpikeMonitor/GroupMonitor statistics.
+
+Operates on the [T, N] boolean rasters produced by ``engine.run`` (the
+paper's correctness metric is the total spike count; these utilities add
+the per-group rates, ISI statistics, and synchrony measures CARLsim's
+monitors expose).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.network import NetStatic
+
+__all__ = ["group_rates", "isi_stats", "synchrony_index", "population_summary"]
+
+
+def group_rates(static: NetStatic, raster: np.ndarray, dt_ms: float = 1.0) -> dict:
+    """Mean firing rate (Hz) per group over the raster window."""
+    raster = np.asarray(raster)
+    t_s = raster.shape[0] * dt_ms / 1000.0
+    out = {}
+    for g in static.groups:
+        sl = slice(g.start, g.start + g.size)
+        out[g.name] = float(raster[:, sl].sum() / (g.size * t_s))
+    return out
+
+
+def isi_stats(raster: np.ndarray, dt_ms: float = 1.0) -> dict:
+    """Inter-spike-interval mean/CV pooled over neurons (CV≈1 = Poisson-like,
+    CV≈0 = clockwork — synfire volleys sit in between)."""
+    raster = np.asarray(raster)
+    isis = []
+    for i in range(raster.shape[1]):
+        t = np.nonzero(raster[:, i])[0]
+        if len(t) >= 2:
+            isis.append(np.diff(t) * dt_ms)
+    if not isis:
+        return {"mean_ms": float("nan"), "cv": float("nan"), "n": 0}
+    isis = np.concatenate(isis)
+    mean = float(isis.mean())
+    cv = float(isis.std() / mean) if mean > 0 else float("nan")
+    return {"mean_ms": mean, "cv": cv, "n": int(len(isis))}
+
+
+def synchrony_index(raster: np.ndarray, window: int = 5) -> float:
+    """Golomb–Rinzel-style synchrony: variance of the population rate over
+    mean single-neuron variance, smoothed over ``window`` ticks. 0 = async,
+    → 1 = perfectly synchronized volleys (synfire waves score high)."""
+    raster = np.asarray(raster, dtype=np.float32)
+    if raster.shape[0] < window * 2:
+        return float("nan")
+    k = np.ones(window) / window
+    smooth = np.apply_along_axis(lambda x: np.convolve(x, k, "valid"), 0, raster)
+    pop = smooth.mean(axis=1)
+    var_pop = pop.var()
+    var_ind = smooth.var(axis=0).mean()
+    return float(var_pop / var_ind) if var_ind > 0 else 0.0
+
+
+def population_summary(static: NetStatic, raster: np.ndarray,
+                       dt_ms: float = 1.0) -> dict:
+    raster = np.asarray(raster)
+    return {
+        "total_spikes": int(raster.sum()),
+        "mean_rate_hz": float(raster.mean() * 1000.0 / dt_ms),
+        "rates": group_rates(static, raster, dt_ms),
+        "isi": isi_stats(raster, dt_ms),
+        "synchrony": synchrony_index(raster),
+    }

@@ -1,0 +1,323 @@
+"""Network builder — CARLsim's createGroup/connect API, compiled to pytrees.
+
+The builder mirrors how the paper's Synfire4 network is declared in CARLsim
+(groups + connection groups, Tables I/II), then ``compile()`` lowers it into
+three pytrees:
+
+  * static  — hashable topology (slices, delays, receptor types, dt, ...)
+  * params  — immutable arrays (neuron parameters, connectivity masks,
+              generator rates)
+  * state   — mutable arrays (membrane state, **fp16 synaptic weights**,
+              delay ring, STP/STDP traces, RNG key)
+
+Weights live in *state*, not params, because STDP mutates them at runtime —
+exactly the data CARLsim moved to IEEE fp16. ``compile()`` registers every
+allocation against a :class:`~repro.memory.MemoryLedger` under the paper's
+seven load-step names, reproducing Tables III/IV.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import neurons as nrn
+from repro.core.conductance import COBAConfig, ConductanceState, init_conductance_state
+from repro.core.plasticity import (
+    DASTDPState,
+    STDPConfig,
+    STDPState,
+    init_da_stdp_state,
+    init_stdp_state,
+)
+from repro.core.synapses import (
+    ProjectionParams,
+    ProjectionSpec,
+    STPConfig,
+    STPState,
+    build_bernoulli,
+    build_fixed_fanin,
+    init_stp_state,
+)
+from repro.memory import MemoryLedger
+from repro.precision import PrecisionPolicy, get_policy
+
+__all__ = ["NetworkBuilder", "CompiledNetwork", "NetStatic", "NetParams", "NetState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    name: str
+    start: int
+    size: int
+    is_generator: bool = False
+    rate_hz: float = 0.0  # rate during [0, until_ms) — the stimulus pulse
+    until_ms: float = math.inf
+    rate_after_hz: float = 0.0  # sustained rate after the pulse
+
+
+@dataclasses.dataclass(frozen=True)
+class NetStatic:
+    """Hashable network topology; closed over by the jitted step."""
+
+    n: int
+    ring_len: int
+    ring_channels: int  # 1 = CUBA (signed), 2 = COBA (exc, inh magnitudes)
+    dt: float
+    substeps: int
+    method: str
+    policy_name: str
+    groups: tuple[GroupSpec, ...]
+    projections: tuple[ProjectionSpec, ...]
+    stdp: tuple[STDPConfig | None, ...]  # aligned with projections
+    coba: COBAConfig | None = None
+
+    def group(self, name: str) -> GroupSpec:
+        for g in self.groups:
+            if g.name == name:
+                return g
+        raise KeyError(name)
+
+    def group_slice(self, name: str) -> slice:
+        g = self.group(name)
+        return slice(g.start, g.start + g.size)
+
+
+class NetParams(NamedTuple):
+    neuron: nrn.NeuronParams
+    masks: tuple[jax.Array, ...]  # per projection [pre, post] bool
+    gen_rate: jax.Array  # [N] Hz during the pulse (0 for non-generators)
+    gen_until: jax.Array  # [N] ms pulse end
+    gen_rate_after: jax.Array  # [N] Hz sustained after the pulse
+
+
+class NetState(NamedTuple):
+    t: jax.Array  # int32 tick
+    key: jax.Array  # PRNG key
+    neurons: nrn.NeuronState
+    ring: jax.Array  # [D, N, C] storage dtype
+    weights: tuple[jax.Array, ...]  # per projection [pre, post] storage dtype
+    stp: tuple[STPState | None, ...]
+    stdp: tuple[STDPState | DASTDPState | None, ...]
+    cond: ConductanceState | None
+
+
+@dataclasses.dataclass
+class _PendingConnect:
+    pre: str
+    post: str
+    fanin: int
+    weight: float
+    delay_ms: int
+    plastic: bool
+    stdp: STDPConfig | None
+    stp: STPConfig | None
+    da_modulated: bool
+    mode: str = "fanin"  # "fanin" (exact) | "prob" (CARLsim random connect)
+
+
+class NetworkBuilder:
+    """CARLsim-style declarative network construction."""
+
+    def __init__(self, *, seed: int = 42):
+        self._groups: list[tuple[str, nrn.NeuronParams | None, GroupSpec]] = []
+        self._connects: list[_PendingConnect] = []
+        self._cursor = 0
+        self._seed = seed
+
+    # -- groups ---------------------------------------------------------------
+    def add_group(self, name: str, params: nrn.NeuronParams) -> str:
+        size = int(params.model.shape[0])
+        spec = GroupSpec(name=name, start=self._cursor, size=size)
+        self._groups.append((name, params, spec))
+        self._cursor += size
+        return name
+
+    def add_spike_generator(
+        self, name: str, size: int, rate_hz: float, until_ms: float = math.inf,
+        rate_after_hz: float = 0.0,
+    ) -> str:
+        spec = GroupSpec(
+            name=name, start=self._cursor, size=size,
+            is_generator=True, rate_hz=rate_hz, until_ms=until_ms,
+            rate_after_hz=rate_after_hz,
+        )
+        self._groups.append((name, nrn.generator(size), spec))
+        self._cursor += size
+        return name
+
+    # -- connections ------------------------------------------------------------
+    def connect(
+        self,
+        pre: str,
+        post: str,
+        *,
+        fanin: int,
+        weight: float,
+        delay_ms: int,
+        plastic: bool = False,
+        stdp: STDPConfig | None = None,
+        stp: STPConfig | None = None,
+        da_modulated: bool = False,
+        mode: str = "fanin",
+    ) -> None:
+        if delay_ms < 1:
+            raise ValueError("delay must be >= 1 ms (one tick)")
+        self._connects.append(
+            _PendingConnect(pre, post, fanin, weight, delay_ms,
+                            plastic or stdp is not None, stdp, stp, da_modulated,
+                            mode)
+        )
+
+    # -- compile ------------------------------------------------------------------
+    def compile(
+        self,
+        *,
+        policy: str | PrecisionPolicy = "fp32",
+        dt: float = 1.0,
+        substeps: int = 2,
+        method: str = "euler",
+        conductances: COBAConfig | None = None,
+        ledger: MemoryLedger | None = None,
+        monitor_ms_hint: int = 0,
+    ) -> "CompiledNetwork":
+        if isinstance(policy, str):
+            policy = get_policy(policy)
+        ledger = ledger if ledger is not None else MemoryLedger()
+        sdt = policy.state_storage
+        wdt = policy.param_storage
+
+        groups = tuple(spec for _, _, spec in self._groups)
+        n = self._cursor
+
+        # 1. CARLsim Init — builder bookkeeping / static tables.
+        with ledger.stage("1. CARLsim Init."):
+            ledger.register("static.tables", jnp.zeros((len(groups) * 16,), jnp.int32))
+
+        # 2. Random Gen — RNG state + generator schedules.
+        key = jax.random.key(self._seed)
+        gen_rate = np.zeros((n,), np.float32)
+        gen_until = np.full((n,), np.float32(np.inf))
+        gen_rate_after = np.zeros((n,), np.float32)
+        for _, _, spec in self._groups:
+            if spec.is_generator:
+                sl = slice(spec.start, spec.start + spec.size)
+                gen_rate[sl] = spec.rate_hz
+                gen_until[sl] = spec.until_ms
+                gen_rate_after[sl] = spec.rate_after_hz
+        gen_rate = jnp.asarray(gen_rate)
+        gen_until = jnp.asarray(gen_until)
+        gen_rate_after = jnp.asarray(gen_rate_after)
+        with ledger.stage("2. Random Gen."):
+            ledger.register("rng", (key, gen_rate, gen_until, gen_rate_after))
+
+        # 3. Conn. Info — connectivity masks (and the host-side build).
+        rng = np.random.default_rng(self._seed)
+        specs: list[ProjectionSpec] = []
+        projs: list[ProjectionParams] = []
+        stdp_cfgs: list[STDPConfig | None] = []
+        for c in self._connects:
+            gpre = next(s for _, _, s in self._groups if s.name == c.pre)
+            gpost = next(s for _, _, s in self._groups if s.name == c.post)
+            receptor = "inh" if c.weight < 0 else "exc"
+            spec = ProjectionSpec(
+                name=f"{c.pre}->{c.post}",
+                pre_start=gpre.start, pre_size=gpre.size,
+                post_start=gpost.start, post_size=gpost.size,
+                delay_ms=int(round(c.delay_ms / dt)),
+                receptor=receptor, plastic=c.plastic, stp=c.stp,
+            )
+            specs.append(spec)
+            builder = build_fixed_fanin if c.mode == "fanin" else build_bernoulli
+            projs.append(builder(rng, spec, c.fanin, c.weight, storage_dtype=wdt))
+            if c.stdp is not None and c.da_modulated and c.stdp.tau_elig is None:
+                c = dataclasses.replace(c, stdp=dataclasses.replace(c.stdp, tau_elig=100.0))
+            stdp_cfgs.append(c.stdp)
+        with ledger.stage("3. Conn. Info"):
+            ledger.register("masks", tuple(p.mask for p in projs))
+
+        # 4. Syn. State — weights (the fp16 payload), delay ring, STP.
+        max_delay = max((s.delay_ms for s in specs), default=1)
+        ring_len = max_delay + 1
+        channels = 2 if conductances is not None else 1
+        ring = jnp.zeros((ring_len, n, channels), sdt)
+        stp_states: list[STPState | None] = [
+            init_stp_state(s.stp, s.pre_size, sdt) if s.stp is not None else None
+            for s in specs
+        ]
+        with ledger.stage("4. Syn. State"):
+            ledger.register("weights", tuple(p.weight for p in projs))
+            ledger.register("ring", ring)
+            ledger.register("stp", tuple(s for s in stp_states if s is not None))
+
+        # 5. Neuron State — v, u, refractory, conductances.
+        neuron_params = nrn.concat_params([p for _, p, _ in self._groups])
+        nstate = nrn.init_neuron_state(neuron_params, sdt)
+        cond = init_conductance_state(n, sdt) if conductances is not None else None
+        with ledger.stage("5. Neuron State"):
+            ledger.register("neuron.state", nstate)
+            if cond is not None:
+                ledger.register("conductances", cond)
+
+        # 6. Group State — per-neuron model parameter tables.
+        with ledger.stage("6. Group State"):
+            ledger.register("neuron.params", neuron_params)
+
+        # 7. Auxiliary Data — plasticity traces + monitor buffers.
+        stdp_states: list = []
+        for spec, cfg in zip(specs, stdp_cfgs):
+            if cfg is None:
+                stdp_states.append(None)
+            elif cfg.tau_elig is not None:
+                stdp_states.append(init_da_stdp_state(spec.pre_size, spec.post_size, sdt))
+            else:
+                stdp_states.append(init_stdp_state(spec.pre_size, spec.post_size))
+        with ledger.stage("7. Auxiliary Data"):
+            ledger.register("stdp.traces", tuple(s for s in stdp_states if s is not None))
+            if monitor_ms_hint:
+                ledger.register(
+                    "monitor.spikes",
+                    jax.ShapeDtypeStruct((monitor_ms_hint, n), jnp.bool_),
+                )
+
+        static = NetStatic(
+            n=n, ring_len=ring_len, ring_channels=channels, dt=dt,
+            substeps=substeps, method=method, policy_name=policy.name,
+            groups=groups, projections=tuple(specs), stdp=tuple(stdp_cfgs),
+            coba=conductances,
+        )
+        params = NetParams(
+            neuron=neuron_params,
+            masks=tuple(p.mask for p in projs),
+            gen_rate=gen_rate,
+            gen_until=gen_until,
+            gen_rate_after=gen_rate_after,
+        )
+        state0 = NetState(
+            t=jnp.int32(0), key=key, neurons=nstate, ring=ring,
+            weights=tuple(p.weight for p in projs),
+            stp=tuple(stp_states), stdp=tuple(stdp_states), cond=cond,
+        )
+        return CompiledNetwork(static=static, params=params, state0=state0,
+                               ledger=ledger, policy=policy)
+
+
+@dataclasses.dataclass
+class CompiledNetwork:
+    static: NetStatic
+    params: NetParams
+    state0: NetState
+    ledger: MemoryLedger
+    policy: PrecisionPolicy
+
+    @property
+    def n_neurons(self) -> int:
+        return self.static.n
+
+    @property
+    def n_synapses(self) -> int:
+        return int(sum(int(m.sum()) for m in self.params.masks))

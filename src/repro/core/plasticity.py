@@ -1,0 +1,145 @@
+"""Long-term plasticity: pair-based STDP and dopamine-modulated STDP.
+
+Part of CARLsim's "full feature set" the paper ports (STDP, neuromodulation).
+Pair-based STDP with exponential windows is implemented with per-neuron
+pre/post traces; DA-STDP keeps a per-synapse eligibility trace gated by a
+scalar dopamine signal, CARLsim-style.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["STDPConfig", "STDPState", "stdp_step", "DASTDPState", "da_stdp_step",
+           "HomeostasisConfig", "homeostasis_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class STDPConfig:
+    a_plus: float = 0.004
+    a_minus: float = 0.0033
+    tau_plus: float = 20.0  # ms
+    tau_minus: float = 20.0  # ms
+    w_min: float = 0.0
+    w_max: float = 10.0
+    # DA modulation (None -> plain STDP)
+    tau_elig: float | None = None  # eligibility decay for DA-STDP
+
+
+class STDPState(NamedTuple):
+    pre_trace: jax.Array  # [n_pre] f32
+    post_trace: jax.Array  # [n_post] f32
+
+
+class DASTDPState(NamedTuple):
+    pre_trace: jax.Array
+    post_trace: jax.Array
+    elig: jax.Array  # [n_pre, n_post] eligibility
+
+
+def init_stdp_state(n_pre: int, n_post: int) -> STDPState:
+    return STDPState(
+        pre_trace=jnp.zeros((n_pre,), jnp.float32),
+        post_trace=jnp.zeros((n_post,), jnp.float32),
+    )
+
+
+def init_da_stdp_state(n_pre: int, n_post: int, dtype=jnp.float32) -> DASTDPState:
+    return DASTDPState(
+        pre_trace=jnp.zeros((n_pre,), jnp.float32),
+        post_trace=jnp.zeros((n_post,), jnp.float32),
+        elig=jnp.zeros((n_pre, n_post), dtype),
+    )
+
+
+def _trace_step(trace: jax.Array, spikes: jax.Array, tau: float, dt: float):
+    return trace * jnp.exp(-dt / tau) + spikes.astype(jnp.float32)
+
+
+def stdp_step(
+    cfg: STDPConfig,
+    state: STDPState,
+    weight: jax.Array,  # [pre, post] storage dtype
+    mask: jax.Array,  # [pre, post] bool
+    pre_spikes: jax.Array,  # [pre] bool
+    post_spikes: jax.Array,  # [post] bool
+    dt: float = 1.0,
+) -> tuple[STDPState, jax.Array]:
+    """One tick of pair-based STDP; returns (state', new_weight).
+
+    LTP: post spike at t_post after pre trace -> Δw = +A⁺·pre_trace.
+    LTD: pre spike at t_pre after post trace -> Δw = −A⁻·post_trace.
+    Weights clipped to [w_min, w_max] and stored back in the storage dtype —
+    plastic weights are exactly the fp16 data the paper moved to binary16.
+    """
+    pre_t = _trace_step(state.pre_trace, pre_spikes, cfg.tau_plus, dt)
+    post_t = _trace_step(state.post_trace, post_spikes, cfg.tau_minus, dt)
+    w = weight.astype(jnp.float32)
+    ltp = cfg.a_plus * jnp.outer(pre_t, post_spikes.astype(jnp.float32))
+    ltd = cfg.a_minus * jnp.outer(pre_spikes.astype(jnp.float32), post_t)
+    w = jnp.clip(w + ltp - ltd, cfg.w_min, cfg.w_max)
+    w = jnp.where(mask, w, 0.0).astype(weight.dtype)
+    return STDPState(pre_trace=pre_t, post_trace=post_t), w
+
+
+def da_stdp_step(
+    cfg: STDPConfig,
+    state: DASTDPState,
+    weight: jax.Array,
+    mask: jax.Array,
+    pre_spikes: jax.Array,
+    post_spikes: jax.Array,
+    dopamine: jax.Array,  # scalar DA concentration this tick
+    dt: float = 1.0,
+) -> tuple[DASTDPState, jax.Array]:
+    """Dopamine-modulated STDP: STDP updates accumulate into an eligibility
+    trace; the weight only moves when dopamine is present (dw = DA · elig)."""
+    assert cfg.tau_elig is not None, "da_stdp_step requires tau_elig"
+    pre_t = _trace_step(state.pre_trace, pre_spikes, cfg.tau_plus, dt)
+    post_t = _trace_step(state.post_trace, post_spikes, cfg.tau_minus, dt)
+    ltp = cfg.a_plus * jnp.outer(pre_t, post_spikes.astype(jnp.float32))
+    ltd = cfg.a_minus * jnp.outer(pre_spikes.astype(jnp.float32), post_t)
+    elig = state.elig.astype(jnp.float32)
+    elig = elig * jnp.exp(-dt / cfg.tau_elig) + (ltp - ltd)
+    w = weight.astype(jnp.float32) + dopamine * elig
+    w = jnp.clip(w, cfg.w_min, cfg.w_max)
+    w = jnp.where(mask, w, 0.0).astype(weight.dtype)
+    new = DASTDPState(pre_trace=pre_t, post_trace=post_t,
+                      elig=elig.astype(state.elig.dtype))
+    return new, w
+
+
+# -- homeostatic synaptic scaling (CARLsim setHomeostasis) ---------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HomeostasisConfig:
+    """Multiplicative synaptic scaling toward a target firing rate."""
+
+    target_hz: float = 10.0
+    tau_avg_ms: float = 10_000.0  # firing-rate averaging window
+    beta: float = 0.1  # scaling strength per second
+
+
+def homeostasis_step(
+    cfg: HomeostasisConfig,
+    avg_rate: jax.Array,  # [n_post] running average rate (Hz)
+    weight: jax.Array,  # [pre, post]
+    post_spikes: jax.Array,  # [post] bool
+    dt: float = 1.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (new avg_rate, scaled weight). Incoming weights of a neuron
+    firing above target shrink multiplicatively; below target they grow —
+    the classic synaptic-scaling stabilizer on top of STDP."""
+    decay = jnp.exp(-dt / cfg.tau_avg_ms)
+    inst = post_spikes.astype(jnp.float32) * (1000.0 / dt)  # Hz this tick
+    new_avg = avg_rate * decay + inst * (1.0 - decay)
+    err = (cfg.target_hz - new_avg) / jnp.maximum(cfg.target_hz, 1e-6)
+    # per-tick scale clamped: large rate errors must not flip the sign or
+    # blow up the multiplicative update (stability guard).
+    scale = jnp.clip(1.0 + cfg.beta * err * (dt / 1000.0), 0.5, 1.5)
+    w = (weight.astype(jnp.float32) * scale[None, :]).astype(weight.dtype)
+    return new_avg, w

@@ -1,0 +1,101 @@
+"""Real-time sizing — paper §III-B, generalized to the TPU roofline.
+
+The paper downsizes Synfire4 until the M33 meets the 1 ms/tick wall-clock
+deadline (186 neurons real-time, 372 with the second core, ~1k with ISA
+tricks). The same question on a TPU pod: how many neurons fit under the
+deadline given the three roofline terms? The answer is analytic because the
+per-tick work is regular:
+
+  compute:    ~C_N flops/neuron (IZH4 Euler×2) + 2·fanin flops/neuron (MAC)
+  memory:     weight bytes dominate: fanin · bytes_per_weight per neuron/tick
+  collective: the spike all-gather: N bits per device per tick over ICI
+
+fp16 halves the memory term — the paper's technique is what moves the
+real-time boundary when memory-bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["HardwareSpec", "V5E", "M33", "RealtimeSizing", "realtime_sizing"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    flops: float  # peak FLOP/s (f32-equivalent for scalar cores)
+    hbm_bw: float  # bytes/s
+    link_bw: float  # bytes/s per ICI link (0 = single chip)
+    chips: int = 1
+
+
+V5E = HardwareSpec(name="tpu_v5e", flops=197e12, hbm_bw=819e9, link_bw=50e9)
+# RP2350 Cortex-M33 @150 MHz: softfp f32 costs ~20 cycles/op ⇒ ≈7.5 MFLOP/s
+# effective; PSRAM QSPI @133 MHz × 4 bits ≈ 66 MB/s. With these constants the
+# compute term caps real-time at ≈190 neurons (fanin 60, event-driven) —
+# matching the paper's measured 186 and its statement that the mini SNN is
+# processing- not memory-bound.
+M33 = HardwareSpec(name="rp2350_m33", flops=7.5e6, hbm_bw=66e6, link_bw=0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RealtimeSizing:
+    hardware: str
+    chips: int
+    fanin: int
+    bytes_per_weight: int
+    max_neurons_compute: float
+    max_neurons_memory: float
+    max_neurons_collective: float
+
+    @property
+    def max_neurons(self) -> int:
+        return int(min(self.max_neurons_compute, self.max_neurons_memory,
+                       self.max_neurons_collective))
+
+    @property
+    def bottleneck(self) -> str:
+        vals = {
+            "compute": self.max_neurons_compute,
+            "memory": self.max_neurons_memory,
+            "collective": self.max_neurons_collective,
+        }
+        return min(vals, key=vals.get)
+
+
+NEURON_FLOPS = 36.0  # IZH4, 2 Euler substeps (13 flops + spike/reset) × 2
+SPIKE_RATE = 0.025  # active fraction per tick at ~25 Hz (synfire regime)
+
+
+def realtime_sizing(
+    hw: HardwareSpec,
+    *,
+    chips: int = 1,
+    fanin: int = 60,
+    bytes_per_weight: int = 2,  # fp16 — the paper's policy
+    tick_s: float = 1e-3,
+    dense_traversal: bool = True,
+) -> RealtimeSizing:
+    """Max neurons N that meet the real-time deadline per roofline term.
+
+    ``dense_traversal=True`` models the TPU engine (every weight is touched
+    every tick — dense matmul/gather); ``False`` models event-driven
+    CARLsim on the MCU (only firing neurons' synapses walked).
+    """
+    # compute: N·(NEURON_FLOPS + 2·fanin·act) / (chips·flops) = tick
+    act = 1.0 if dense_traversal else SPIKE_RATE
+    n_compute = tick_s * chips * hw.flops / (NEURON_FLOPS + 2.0 * fanin * act)
+    # memory: N·fanin·act·bytes_w (+ ~16B state) / (chips·bw) = tick
+    n_memory = tick_s * chips * hw.hbm_bw / (fanin * act * bytes_per_weight + 16)
+    # collective: all-gather N/8 bytes per tick over one link
+    if hw.link_bw > 0 and chips > 1:
+        n_collective = tick_s * hw.link_bw * 8.0
+    else:
+        n_collective = float("inf")
+    return RealtimeSizing(
+        hardware=hw.name, chips=chips, fanin=fanin,
+        bytes_per_weight=bytes_per_weight,
+        max_neurons_compute=n_compute,
+        max_neurons_memory=n_memory,
+        max_neurons_collective=n_collective,
+    )

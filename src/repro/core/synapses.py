@@ -1,0 +1,164 @@
+"""Synaptic projections: dense delay-bucketed weights + STP.
+
+Hardware adaptation (DESIGN.md §2): CARLsim stores an AoS synapse list and
+walks it per spike — efficient on a scalar M33, hostile to the MXU. We store
+each projection as a dense ``[n_pre, n_post]`` matrix in the policy's storage
+dtype (**fp16 under the paper's policy — this is the paper's headline
+technique**) plus a bool mask, and propagate spikes with one
+``spikes_f32 @ W_f32`` matmul per projection. Axonal delays become a ring of
+per-tick current accumulators: a spike at tick t with delay d lands in ring
+slot (t + d) mod D.
+
+Short-term plasticity (STP) follows CARLsim's Tsodyks–Markram form with
+per-presynaptic-neuron (u, x) state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ProjectionSpec",
+    "ProjectionParams",
+    "STPConfig",
+    "STPState",
+    "build_fixed_fanin",
+    "propagate",
+    "stp_update",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class STPConfig:
+    """Tsodyks–Markram short-term plasticity (CARLsim ``setSTP``)."""
+
+    u0: float = 0.45  # utilization increment U
+    tau_f: float = 50.0  # facilitation time constant (ms)
+    tau_d: float = 750.0  # depression time constant (ms)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectionSpec:
+    """Static description of one connection group (paper Table II row)."""
+
+    name: str
+    pre_start: int
+    pre_size: int
+    post_start: int
+    post_size: int
+    delay_ms: int
+    receptor: str  # "exc" (AMPA/NMDA) or "inh" (GABAa/GABAb)
+    plastic: bool = False
+    stp: STPConfig | None = None
+
+    @property
+    def pre_slice(self) -> slice:
+        return slice(self.pre_start, self.pre_start + self.pre_size)
+
+    @property
+    def post_slice(self) -> slice:
+        return slice(self.post_start, self.post_start + self.post_size)
+
+
+class ProjectionParams(NamedTuple):
+    weight: jax.Array  # [pre, post] storage dtype (fp16 policy) — signed
+    mask: jax.Array  # [pre, post] bool — which synapses exist
+
+
+class STPState(NamedTuple):
+    u: jax.Array  # [pre] facilitation
+    x: jax.Array  # [pre] depression resource
+
+
+def build_fixed_fanin(
+    rng: np.random.Generator,
+    spec: ProjectionSpec,
+    fanin: int,
+    weight: float,
+    *,
+    storage_dtype=jnp.float32,
+) -> ProjectionParams:
+    """Fixed fan-in random connectivity (paper Table II: "Connections, per
+    neuron"): each post neuron draws ``fanin`` distinct pre neurons.
+
+    Built host-side with a seeded numpy Generator so network construction is
+    deterministic and never touches device RNG (paper load step 2 only stores
+    generator state).
+    """
+    n_pre, n_post = spec.pre_size, spec.post_size
+    if fanin > n_pre:
+        raise ValueError(f"{spec.name}: fanin {fanin} > pre group size {n_pre}")
+    mask = np.zeros((n_pre, n_post), dtype=bool)
+    for j in range(n_post):
+        pres = rng.choice(n_pre, size=fanin, replace=False)
+        mask[pres, j] = True
+    w = np.where(mask, np.float32(weight), np.float32(0.0))
+    return ProjectionParams(
+        weight=jnp.asarray(w, storage_dtype), mask=jnp.asarray(mask)
+    )
+
+
+def build_bernoulli(
+    rng: np.random.Generator,
+    spec: ProjectionSpec,
+    fanin: int,
+    weight: float,
+    *,
+    storage_dtype=jnp.float32,
+) -> ProjectionParams:
+    """CARLsim-style probabilistic connect: each (pre, post) pair exists with
+    p = fanin / n_pre, so the *expected* fan-in matches Table II's
+    "Connections per neuron" but with binomial variance — the variance is
+    what makes small scaled-down networks (Synfire4-mini) let the wave die
+    out, as observed in the paper (412 spikes / 30 s)."""
+    n_pre, n_post = spec.pre_size, spec.post_size
+    p = fanin / n_pre
+    mask = rng.random((n_pre, n_post)) < p
+    w = np.where(mask, np.float32(weight), np.float32(0.0))
+    return ProjectionParams(
+        weight=jnp.asarray(w, storage_dtype), mask=jnp.asarray(mask)
+    )
+
+
+def propagate(
+    spec: ProjectionSpec,
+    params: ProjectionParams,
+    spikes: jax.Array,  # [N] bool, full network spike vector
+    stp_state: STPState | None,
+) -> jax.Array:
+    """Synaptic current contribution of this projection: [post_size] f32.
+
+    fp16 weights are up-cast to f32 *at the matmul* (softfp analogue); the
+    Pallas ``syn_matmul`` kernel fuses this decode into the MXU tiles on TPU.
+    """
+    pre_spikes = spikes[spec.pre_slice].astype(jnp.float32)
+    if stp_state is not None and spec.stp is not None:
+        # Effective weight scale A = u⁺·x per presynaptic neuron.
+        pre_spikes = pre_spikes * (stp_state.u * stp_state.x)
+    w = params.weight.astype(jnp.float32)
+    return pre_spikes @ w
+
+
+def stp_update(
+    cfg: STPConfig, state: STPState, pre_spikes: jax.Array, dt: float
+) -> STPState:
+    """Tsodyks–Markram: on a spike u += U(1−u) then x −= u⁺x; continuous
+    recovery du/dt = −u/τ_F, dx/dt = (1−x)/τ_D."""
+    s = pre_spikes.astype(jnp.float32)
+    u = state.u.astype(jnp.float32)
+    x = state.x.astype(jnp.float32)
+    u_plus = u + cfg.u0 * (1.0 - u) * s
+    x_minus = x - u_plus * x * s
+    u_rec = u_plus - dt * u_plus / cfg.tau_f
+    x_rec = x_minus + dt * (1.0 - x_minus) / cfg.tau_d
+    return STPState(u=u_rec.astype(state.u.dtype), x=x_rec.astype(state.x.dtype))
+
+
+def init_stp_state(cfg: STPConfig, n_pre: int, dtype=jnp.float32) -> STPState:
+    return STPState(
+        u=jnp.full((n_pre,), cfg.u0, dtype), x=jnp.ones((n_pre,), dtype)
+    )

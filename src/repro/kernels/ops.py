@@ -1,0 +1,53 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the compiled kernels run natively; everywhere else (this CPU
+container, unit tests) they execute through the Pallas interpreter so the
+kernel *logic* is validated bit-for-bit against ``ref.py``. ``use_pallas``
+lets the models swap between the XLA reference path (used by the dry-run,
+which lowers for the production mesh) and the kernel path.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import flash_attn as _flash
+from repro.kernels import izh_update as _izh
+from repro.kernels import stdp_update as _stdp
+from repro.kernels import syn_matmul as _syn
+
+__all__ = ["on_tpu", "izh4_update", "syn_matmul", "flash_attention", "stdp_update"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+@partial(jax.jit, static_argnames=("dt", "substeps"))
+def izh4_update(v, u, i_syn, a, b, c, d, *, dt: float = 1.0, substeps: int = 2):
+    return _izh.izh4_update(v, u, i_syn, a, b, c, d, dt=dt, substeps=substeps,
+                            interpret=_interpret())
+
+
+@jax.jit
+def syn_matmul(x, w):
+    return _syn.syn_matmul(x, w, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = -1):
+    return _flash.flash_attention(q, k, v, causal=causal, window=window,
+                                  interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("a_plus", "a_minus", "w_min", "w_max"))
+def stdp_update(w, mask, pre_trace, post_trace, pre_spikes, post_spikes, *,
+                a_plus: float, a_minus: float, w_min: float, w_max: float):
+    return _stdp.stdp_update(w, mask, pre_trace, post_trace, pre_spikes,
+                             post_spikes, a_plus=a_plus, a_minus=a_minus,
+                             w_min=w_min, w_max=w_max, interpret=_interpret())

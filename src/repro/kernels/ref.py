@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (interpret-mode allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def izh4_ref(v, u, i_syn, a, b, c, d, *, dt: float = 1.0, substeps: int = 2):
+    """IZH4 update + spike + reset; f32 math, storage dtype preserved."""
+    out_dtype = v.dtype
+    v = v.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    i_syn = i_syn.astype(jnp.float32)
+    h = dt / substeps
+    for _ in range(substeps):
+        v = v + h * (0.04 * v * v + 5.0 * v + 140.0 - u + i_syn)
+        u = u + h * a * (b * v - u)
+    spiked = v >= 30.0
+    v = jnp.where(spiked, c, v)
+    u = jnp.where(spiked, u + d, u)
+    return v.astype(out_dtype), u.astype(out_dtype), spiked
+
+
+def syn_matmul_ref(x, w):
+    """x [M, K] @ w [K, N], storage-dtype weights decoded to f32 (softfp)."""
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = -1,
+                        scale: float | None = None):
+    """Exact GQA attention. q [B, Hq, S, D]; k/v [B, Hkv, S, D]; Hq % Hkv == 0.
+
+    ``window > 0`` restricts attention to the last ``window`` positions
+    (local sliding-window attention, RecurrentGemma-style).
+    """
+    b, hq, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(b, hkv, g, sq, dh)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (decode-friendly)
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def stdp_update_ref(w, mask, pre_trace, post_trace, pre_spikes, post_spikes,
+                    *, a_plus: float, a_minus: float, w_min: float, w_max: float):
+    """Fused pair-based STDP weight update (storage-dtype weights)."""
+    wf = w.astype(jnp.float32)
+    ltp = a_plus * jnp.outer(pre_trace, post_spikes.astype(jnp.float32))
+    ltd = a_minus * jnp.outer(pre_spikes.astype(jnp.float32), post_trace)
+    wf = jnp.clip(wf + ltp - ltd, w_min, w_max)
+    return jnp.where(mask, wf, 0.0).astype(w.dtype)

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fp16-storage matmul with fused decode + f32 accumulate.
+
+The paper's FP16 technique at the MXU: weights stay in IEEE fp16 in
+HBM/VMEM and are up-cast *inside the kernel tile* right before the MXU
+issue, accumulating in f32 (the softfp promotion, but free on the MXU since
+it natively multiplies bf16/fp16 inputs into an f32 accumulator). Used for
+SNN spike propagation (spikes_f32 @ W_fp16) and as the LM projection matmul
+with fp16-stored parameters.
+
+Classic 3-D blocked matmul: grid (M/bm, N/bn, K/bk), K innermost, VMEM f32
+scratch accumulator, tile sizes MXU-aligned (128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # fp16 -> f32 decode fused into the MXU feed.
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def syn_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
+               block_k: int = 128, out_dtype=jnp.float32,
+               interpret: bool = False):
+    """``x [M, K] @ w [K, N] -> [M, N]`` with storage-dtype w (fp16/bf16).
+
+    Shapes are zero-padded up to block multiples (zero rows/cols contribute
+    nothing to the accumulator).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = (min(block_m, _ceil_to(m, 8)), min(block_n, _ceil_to(n, 128)),
+                  min(block_k, _ceil_to(k, 128)))
+    mp, np_, kp = -m % bm, -n % bn, -k % bk
+    xp = jnp.pad(x, ((0, mp), (0, kp)))
+    wp = jnp.pad(w, ((0, kp), (0, np_)))
+    mg, ng, kg = (m + mp) // bm, (n + np_) // bn, (k + kp) // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=kg),
+        grid=(mg, ng, kg),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m + mp, n + np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

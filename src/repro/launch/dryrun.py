@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST precede any jax import: jax locks the device count
+# on first backend init. (Override for small-host testing only.)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces:
+  * proof of coherence: ``.lower().compile()`` succeeds on the 16×16 pod and
+    the 2×16×16 multi-pod mesh with the production shardings,
+  * ``memory_analysis()`` (per-device bytes — the fits-in-HBM evidence),
+  * ``cost_analysis()`` FLOPs/bytes and a collective-bytes breakdown parsed
+    from the compiled HLO.
+
+XLA's HloCostAnalysis visits while-loop bodies ONCE, so scanned models
+undercount. The roofline therefore compiles *analysis twins* per cell:
+an unrolled 1-layer and 2-layer variant with unchunked CE/attention; the
+exact total is  cost(1L) + (L−1)·(cost(2L) − cost(1L))  (layer stacks are
+homogeneous). Hybrid archs (python-loop layers) only need the unchunking.
+Production memory numbers always come from the real scanned compile.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, SHAPES, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.models.tasks import build_task
+from repro.precision import get_policy
+
+# -- HLO collective parsing -----------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+_COLL_RE = re.compile(
+    r"(\w+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind over the compiled HLO."""
+    out: dict[str, dict] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.groups()
+        b = _shape_bytes(shape_str)
+        ent = out.setdefault(kind, {"count": 0, "bytes": 0})
+        ent["count"] += 1
+        ent["bytes"] += b
+    return out
+
+
+def collective_total(colls: dict) -> int:
+    return sum(v["bytes"] for v in colls.values())
+
+
+# -- cell execution ---------------------------------------------------------------
+
+
+def _should_skip(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention arch: 500k decode is quadratic-cost/"
+                "full-KV; skipped per assignment (see DESIGN.md §5)")
+    return None
+
+
+def _compile_stats(task) -> dict:
+    t0 = time.time()
+    lowered = task.lower()
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    return {
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+        },
+        "collectives": colls,
+        "collective_bytes": collective_total(colls),
+    }
+
+
+def _analysis_stats(cfg, shape, mesh, policy, seq_shard: bool) -> dict:
+    """Exact-cost twins: unrolled 1L/2L (homogeneous) or unchunked (hybrid)."""
+    full_block = max(shape.seq_len, 1)
+
+    def cell(n_layers: int):
+        c = dataclasses.replace(cfg, n_layers=n_layers)
+        t = build_task(c, shape, mesh, policy, seq_shard=seq_shard,
+                       ce_chunk=full_block, attn_block_k=full_block,
+                       unroll=True)
+        return _compile_stats(t)
+
+    if shape.kind == "decode":
+        # Decode graphs are small; unroll ALL layers — exact, and avoids
+        # 1L/2L extrapolation nonlinearity (the partitioner's collective
+        # choices are not layer-linear around tiny models).
+        t = build_task(cfg, shape, mesh, policy, seq_shard=seq_shard,
+                       ce_chunk=full_block, attn_block_k=full_block,
+                       unroll=True)
+        s = _compile_stats(t)
+        return {
+            "method": "full unroll",
+            "flops": s["flops"],
+            "bytes_accessed": s["bytes_accessed"],
+            "collectives": s["collectives"],
+            "collective_bytes": s["collective_bytes"],
+        }
+
+    if cfg.homogeneous:
+        s1 = cell(1)
+        s2 = cell(2)
+        layers = cfg.n_layers
+
+        def extrapolate(k1, k2):
+            return k1 + (layers - 1) * (k2 - k1)
+
+        colls = {}
+        for kind in set(s1["collectives"]) | set(s2["collectives"]):
+            c1 = s1["collectives"].get(kind, {"count": 0, "bytes": 0})
+            c2 = s2["collectives"].get(kind, {"count": 0, "bytes": 0})
+            colls[kind] = {
+                "count": int(extrapolate(c1["count"], c2["count"])),
+                "bytes": int(extrapolate(c1["bytes"], c2["bytes"])),
+            }
+        return {
+            "method": "unrolled 1L/2L extrapolation",
+            "flops": float(extrapolate(s1["flops"], s2["flops"])),
+            "bytes_accessed": float(extrapolate(s1["bytes_accessed"],
+                                                s2["bytes_accessed"])),
+            "collectives": colls,
+            "collective_bytes": int(sum(v["bytes"] for v in colls.values())),
+        }
+    # hybrid: layers are python-looped (already exact); just unchunk.
+    t = build_task(cfg, shape, mesh, policy, seq_shard=seq_shard,
+                   ce_chunk=full_block, attn_block_k=full_block, unroll=True)
+    s = _compile_stats(t)
+    return {
+        "method": "python-loop layers, unchunked",
+        "flops": s["flops"],
+        "bytes_accessed": s["bytes_accessed"],
+        "collectives": s["collectives"],
+        "collective_bytes": s["collective_bytes"],
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str, *,
+             policy_name: str = "fp16", analysis: bool = True,
+             seq_shard: bool = True, microbatch: int = 1,
+             force: bool = False, kv_layout: str = "headdim",
+             ssm_chunk: int = 0) -> dict:
+    from repro.launch import mesh as meshlib
+    from repro.models import mamba as mambalib
+    meshlib.KV_CACHE_LAYOUT[0] = kv_layout
+    mambalib.set_ssm_chunk(ssm_chunk)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "policy": policy_name, "kind": shape.kind, "kv_layout": kv_layout,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+    }
+    skip = _should_skip(cfg, shape)
+    if skip:
+        record["status"] = "skipped"
+        record["reason"] = skip
+        _write(path, record)
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    policy = get_policy(policy_name)
+    try:
+        task = build_task(cfg, shape, mesh, policy, seq_shard=seq_shard,
+                          microbatch=microbatch)
+        record["production"] = _compile_stats(task)
+        record["n_devices"] = mesh.devices.size
+        if analysis and mesh_kind == "single":
+            record["analysis"] = _analysis_stats(cfg, shape, mesh, policy,
+                                                 seq_shard)
+        record["status"] = "ok"
+    except Exception as e:  # record the failure — these are bugs to fix
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    _write(path, record)
+    return record
+
+
+def _write(path: str, record: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (comma lists ok)")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--policy", default="fp16")
+    ap.add_argument("--no-analysis", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--kv-layout", default="headdim", choices=["headdim", "seq"])
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_NAMES) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    t0 = time.time()
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, args.out,
+                               policy_name=args.policy,
+                               analysis=not args.no_analysis,
+                               seq_shard=not args.no_seq_shard,
+                               microbatch=args.microbatch,
+                               kv_layout=args.kv_layout,
+                               ssm_chunk=args.ssm_chunk,
+                               force=args.force)
+                status = rec["status"]
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_err += status == "error"
+                extra = ""
+                if status == "ok":
+                    mem = rec["production"]["memory"]
+                    extra = (f"args={mem['argument_bytes'] / 2**30:.2f}GiB "
+                             f"temp={mem['temp_bytes'] / 2**30:.2f}GiB "
+                             f"compile={rec['production']['compile_s']:.0f}s")
+                elif status == "error":
+                    extra = rec["error"][:120]
+                print(f"[{time.time() - t0:7.0f}s] {arch:24s} {shape:12s} "
+                      f"{mesh_kind:6s} {status:8s} {extra}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"in {time.time() - t0:.0f}s")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Production meshes + sharding rules (FSDP × TP × EP, multi-pod DP).
+
+Mesh: 16×16 = 256 chips/pod over axes ("data", "model"); multi-pod adds a
+leading "pod" axis (2×16×16 = 512). Parameter layout: every ≥2-D weight is
+sharded FSDP-style over ``data`` on its input dim and tensor-parallel over
+``model`` on its output dim (ZeRO-3 × Megatron); experts shard over
+``model`` (EP); vocab shards over ``model``; batch shards over
+(pod, data); KV caches shard batch × heads.
+
+Rules are name-based over the parameter tree paths, applied to the trailing
+dims (stacked-layer leading [L] dims stay unsharded). GSPMD pads
+non-divisible dims (40 heads on 16-way ``model``), which the roofline
+accounts for via the useful-compute ratio.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "make_production_mesh", "make_host_mesh", "data_axes",
+    "param_pspec", "tree_pspecs", "batch_pspecs", "named",
+]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")) -> Mesh:
+    """Small CPU mesh for tests/examples (requires host device override)."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: Mesh):
+    """Batch axes: ('pod', 'data') when a pod axis exists."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# -- parameter rules -----------------------------------------------------------
+
+# key -> spec over the *trailing* dims of the leaf.
+_RULES: dict[str, tuple] = {
+    # embeddings / head
+    "embed": ("model", "data"),
+    "lm_head": ("data", "model"),
+    # attention
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "wo": ("model", "data"),
+    "bq": ("model",),
+    "bk": ("model",),
+    "bv": ("model",),
+    # mlp
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # mamba
+    "in_proj": ("data", "model"),
+    "gate_proj": ("data", "model"),
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "dt_bias": ("model",),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "A_log": ("model", None),
+    "D": ("model",),
+    "out_proj": ("model", "data"),
+    # rg-lru
+    "w_a": ("data", "model"),
+    "w_x": ("data", "model"),
+    "b_a": ("model",),
+    "b_x": ("model",),
+    "lam": ("model",),
+    # moe
+    "router": ("data", None),
+}
+
+# MoE expert tensors: EP over the expert dim when E divides the model axis
+# (granite: 32 experts / 16), else tensor-parallel inside each expert
+# (qwen2-moe: 60 experts don't divide 16 — replicating 60 expert FFNs would
+# blow per-device memory).
+_MOE_RULES_EP: dict[str, tuple] = {
+    "w_gate": ("model", "data", None),  # [E, D, F]
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),  # [E, F, D]
+}
+_MOE_RULES_TP: dict[str, tuple] = {
+    "w_gate": (None, "data", "model"),
+    "w_up": (None, "data", "model"),
+    "w_down": (None, "model", "data"),
+}
+
+
+def param_pspec(path: tuple, leaf: Any, mesh: Mesh) -> P:
+    """PartitionSpec for a parameter leaf, by trailing-dim rules."""
+    keys = [getattr(p, "key", None) or getattr(p, "name", None) or str(p)
+            for p in path]
+    name = keys[-1] if keys else ""
+    in_moe = any(k == "moe" for k in keys)
+    in_shared = any(k == "shared" for k in keys)
+    rule = None
+    if in_moe and not in_shared and name in _MOE_RULES_EP:
+        shape = getattr(leaf, "shape", ())
+        e_dim = shape[-3] if len(shape) >= 3 else 0
+        model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+        ep_ok = e_dim and e_dim % model_size == 0
+        rule = _MOE_RULES_EP[name] if ep_ok else _MOE_RULES_TP[name]
+    elif name in _RULES:
+        rule = _RULES[name]
+    ndim = len(getattr(leaf, "shape", ()))
+    if rule is None or ndim == 0:
+        return P()
+    rule = rule[-ndim:] if len(rule) > ndim else rule
+    lead = ndim - len(rule)
+    return P(*([None] * lead), *rule)
+
+
+# base (unstacked) rank and trailing-dim rule per cache leaf; homogeneous
+# archs stack a leading [L] dim which stays unsharded. KV shards the
+# head_dim (always 16-divisible here), not heads — GQA kv counts (1..8)
+# don't divide a 16-way model axis.
+# Lever B (§Perf): KV layout "headdim" (default) shards Dh; "seq" shards
+# the cache sequence dim — changes the decode collective pattern entirely.
+KV_CACHE_LAYOUT = ["headdim"]
+
+_CACHE_RULES: dict[str, tuple[int, tuple]] = {
+    "k": (4, ("batch", None, None, "model")),  # [B, C, H, Dh]
+    "v": (4, ("batch", None, None, "model")),
+    "pos": (1, (None,)),
+    "conv": (3, ("batch", None, "model")),  # [B, K-1, Di] / [B, 3, W]
+    "ssm": (3, ("batch", "model", None)),  # [B, Di, N]
+    "h": (2, ("batch", "model")),  # [B, W]
+}
+
+
+def cache_pspec(path: tuple, leaf: Any, mesh: Mesh) -> P:
+    """KV/SSM cache leaves: batch over data axes, features/heads over model."""
+    keys = [getattr(p, "key", None) or getattr(p, "name", None) or str(p)
+            for p in path]
+    name = keys[-1] if keys else ""
+    if name not in _CACHE_RULES:
+        return P()
+    base, rule = _CACHE_RULES[name]
+    if name in ("k", "v") and KV_CACHE_LAYOUT[0] == "seq":
+        rule = ("batch", "model", None, None)
+    d = data_axes(mesh)
+    ndim = len(getattr(leaf, "shape", ()))
+    lead = [None] * max(0, ndim - base)
+    parts = [d if r == "batch" else r for r in rule]
+    return P(*lead, *parts)
+
+
+def fit_spec(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes don't divide evenly.
+
+    XLA pads *internal* shardings but requires exact divisibility for
+    executable *arguments* (e.g. granite's vocab 49155 on a 16-way axis, or
+    long_500k's batch of 1 on `data`)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, part in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        out.append(part if dim % n == 0 else None)
+    return P(*out)
+
+
+def tree_pspecs(tree, mesh: Mesh, rule=param_pspec):
+    """Map a pytree of arrays/specs to a pytree of PartitionSpecs
+    (divisibility-fitted per leaf)."""
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    treedef = jax.tree_util.tree_structure(tree)
+    specs = [fit_spec(rule(path, leaf, mesh), getattr(leaf, "shape", ()), mesh)
+             for path, leaf in paths]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspecs(batch, mesh: Mesh):
+    d = data_axes(mesh)
+
+    def spec(path, leaf, _mesh):
+        ndim = len(getattr(leaf, "shape", ()))
+        if ndim == 0:
+            return P()
+        return P(d, *([None] * (ndim - 1)))
+
+    return tree_pspecs(batch, mesh, rule=spec)
+
+
+def named(specs, mesh: Mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,15 @@
+from repro.memory.ledger import (
+    MCU_BUDGET_BYTES,
+    PAPER_STAGES,
+    V5E_HBM_BYTES,
+    MemoryBudgetError,
+    MemoryLedger,
+)
+
+__all__ = [
+    "MCU_BUDGET_BYTES",
+    "PAPER_STAGES",
+    "V5E_HBM_BYTES",
+    "MemoryBudgetError",
+    "MemoryLedger",
+]

@@ -1,0 +1,153 @@
+"""Memory ledger — the paper's TLSF ramp-up accounting, framework-native.
+
+The paper instruments CARLsim's 7 load steps (Init, Random Gen, Conn Info,
+Syn State, Neuron State, Group State, Auxiliary Data) through the SparkFun
+``sfe_mem_*`` hooks and prints Tables III/IV. On a functional JAX runtime
+there is no malloc to hook, but every allocation is a pytree we create — so
+the ledger registers pytrees under stage names, tracks bytes exactly
+(shape × dtype, works for concrete arrays *and* ShapeDtypeStructs), enforces
+a device budget (8.5 MB to emulate the MCU; 16 GiB/chip HBM at pod scale),
+and renders the same ramp-up table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from contextlib import contextmanager
+from typing import Any, Iterator
+
+from repro.precision.policy import tree_bytes
+
+__all__ = [
+    "MemoryBudgetError",
+    "MemoryLedger",
+    "PAPER_STAGES",
+    "MCU_BUDGET_BYTES",
+    "V5E_HBM_BYTES",
+]
+
+# The seven CARLsim load steps from the paper (Tables III/IV).
+PAPER_STAGES = (
+    "1. CARLsim Init.",
+    "2. Random Gen.",
+    "3. Conn. Info",
+    "4. Syn. State",
+    "5. Neuron State",
+    "6. Group State",
+    "7. Auxiliary Data",
+)
+
+MCU_BUDGET_BYTES = int(8.477 * 1024**2)  # SparkFun Pro Micro SRAM+PSRAM (Table III)
+V5E_HBM_BYTES = 16 * 1024**3  # TPU v5e per-chip HBM
+
+
+class MemoryBudgetError(RuntimeError):
+    """Raised when a registration would exceed the device budget."""
+
+
+@dataclasses.dataclass
+class _Entry:
+    stage: str
+    name: str
+    nbytes: int
+
+
+class MemoryLedger:
+    """Stage-by-stage byte accounting with budget enforcement.
+
+    Example::
+
+        ledger = MemoryLedger(budget=MCU_BUDGET_BYTES)
+        with ledger.stage("3. Conn. Info"):
+            ledger.register("synfire.weights", weights)
+        print(ledger.format_table())
+    """
+
+    def __init__(self, budget: int | None = None, *, name: str = "device"):
+        self.budget = budget
+        self.name = name
+        self._entries: list[_Entry] = []
+        self._current_stage: str | None = None
+
+    # -- registration ---------------------------------------------------------
+    @contextmanager
+    def stage(self, stage: str) -> Iterator[None]:
+        prev, self._current_stage = self._current_stage, stage
+        try:
+            yield
+        finally:
+            self._current_stage = prev
+
+    def register(self, name: str, tree: Any, *, stage: str | None = None) -> int:
+        """Account a pytree's bytes; returns the bytes added."""
+        stage = stage or self._current_stage or "7. Auxiliary Data"
+        nbytes = tree_bytes(tree)
+        if self.budget is not None and self.total_used + nbytes > self.budget:
+            raise MemoryBudgetError(
+                f"{self.name}: stage {stage!r} adding {nbytes / 1024**2:.3f} MB "
+                f"exceeds budget {self.budget / 1024**2:.3f} MB "
+                f"(used {self.total_used / 1024**2:.3f} MB)"
+            )
+        self._entries.append(_Entry(stage=stage, name=name, nbytes=nbytes))
+        return nbytes
+
+    def release(self, name: str) -> int:
+        """Remove entries registered under ``name`` (freeing memory)."""
+        freed = sum(e.nbytes for e in self._entries if e.name == name)
+        self._entries = [e for e in self._entries if e.name != name]
+        return freed
+
+    # -- queries ----------------------------------------------------------------
+    @property
+    def total_used(self) -> int:
+        return sum(e.nbytes for e in self._entries)
+
+    @property
+    def total_available(self) -> int | None:
+        if self.budget is None:
+            return None
+        return self.budget - self.total_used
+
+    def stage_bytes(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for e in self._entries:
+            out[e.stage] = out.get(e.stage, 0) + e.nbytes
+        return out
+
+    def rampup_rows(self) -> list[dict[str, float]]:
+        """Rows in the paper's Table III/IV format (MB), in stage order."""
+        per_stage = self.stage_bytes()
+        ordered = [s for s in PAPER_STAGES if s in per_stage]
+        ordered += [s for s in per_stage if s not in PAPER_STAGES]
+        rows, used = [], 0
+        for s in ordered:
+            used += per_stage[s]
+            row = {
+                "stage": s,
+                "mem_size_mb": per_stage[s] / 1024**2,
+                "total_used_mb": used / 1024**2,
+            }
+            if self.budget is not None:
+                row["total_available_mb"] = (self.budget - used) / 1024**2
+            rows.append(row)
+        return rows
+
+    def format_table(self) -> str:
+        """Render the ramp-up in the paper's Table III layout."""
+        lines = []
+        header = f"{'Simulation load step':<24}{'Mem. Size':>12}{'Total Used':>12}"
+        if self.budget is not None:
+            header += f"{'Total Available':>18}"
+            lines.append(
+                f"{'(budget)':<24}{'':>12}{'':>12}{self.budget / 1024**2:>15.3f} MB"
+            )
+        lines.insert(0, header)
+        for row in self.rampup_rows():
+            line = (
+                f"{row['stage']:<24}"
+                f"{row['mem_size_mb']:>9.3f} MB"
+                f"{row['total_used_mb']:>9.3f} MB"
+            )
+            if "total_available_mb" in row:
+                line += f"{row['total_available_mb']:>15.3f} MB"
+            lines.append(line)
+        return "\n".join(lines)

@@ -1,0 +1,165 @@
+"""GQA attention: chunked online-softmax (XLA path) + KV caches.
+
+The XLA path mirrors the Pallas ``flash_attn`` kernel exactly (same online
+softmax over KV blocks) so it is the lowering used by the production dry-run
+(Pallas targets real TPUs; the dry-run compiles for host devices), and the
+oracle the kernel is validated against. Memory is O(S·bk) instead of O(S²),
+which is what lets prefill_32k fit.
+
+KV caches are held in the precision policy's *storage* dtype — fp16 KV cache
+is the paper's technique applied to serving (it halves the dominant
+decode-time memory term; see EXPERIMENTS.md §Roofline decode_32k).
+
+Two cache layouts:
+  * full: [B, C, Hkv, Dh] with C = max sequence (decode_32k)
+  * ring: C = window (local attention; long_500k on recurrentgemma) — slot
+    = pos mod C, per-slot absolute positions tracked for masking.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense, init_dense, mrope, rope
+
+__all__ = ["init_attention", "attention", "init_kv_cache", "chunked_attention"]
+
+
+def init_attention(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], cfg.d_model, cfg.q_dim, dtype)["w"],
+        "wk": init_dense(ks[1], cfg.d_model, cfg.kv_dim, dtype)["w"],
+        "wv": init_dense(ks[2], cfg.d_model, cfg.kv_dim, dtype)["w"],
+        "wo": init_dense(ks[3], cfg.q_dim, cfg.d_model, dtype)["w"],
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dtype)
+    return p
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, capacity: int, dtype) -> dict:
+    """One layer's KV cache. ``capacity`` = max seq (full) or window (ring)."""
+    return {
+        "k": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((capacity,), -1, jnp.int32),  # absolute position per slot
+    }
+
+
+def chunked_attention(q, k, v, qpos, kpos, *, causal: bool = True,
+                      window: int = -1, block_k: int = 1024) -> jax.Array:
+    """Online-softmax attention blocked over KV.
+
+    q [B, Sq, Hq, D] (f32); k, v [B, Sk, Hkv, D] (storage dtype ok);
+    qpos [B, Sq] and kpos [Sk] absolute positions (kpos < 0 = invalid slot).
+    Returns [B, Sq, Hq, D] f32.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    bk = min(block_k, sk)
+    pad = -sk % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad), constant_values=-1)
+    nblk = (sk + pad) // bk
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, sq, hkv, g, d)
+    kb = k.reshape(b, nblk, bk, hkv, d)
+    vb = v.reshape(b, nblk, bk, hkv, d)
+    pb = kpos.reshape(nblk, bk)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        kc, vc, pc = blk  # [b, bk, hkv, d], [b, bk, hkv, d], [bk]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kc.astype(jnp.float32))
+        valid = pc[None, :] >= 0  # [1, bk]
+        mask = jnp.broadcast_to(valid[None], (b, sq, bk))
+        if causal:
+            mask = mask & (pc[None, None, :] <= qpos[:, :, None])
+        if window > 0:
+            mask = mask & (pc[None, None, :] > qpos[:, :, None] - window)
+        s = jnp.where(mask[:, None, None], s, -1e30)  # [b,h,g,q,k]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), pb),
+    )
+    out = acc / jnp.where(l > 0, l, 1.0)[..., None]
+    return jnp.moveaxis(out.reshape(b, hkv * g, sq, d), 1, 2)
+
+
+def attention(
+    params: dict,
+    x: jax.Array,  # [B, S, D] f32
+    positions: jax.Array,  # [B, S] int32 (or [B, S, 3] under M-RoPE)
+    cfg: ArchConfig,
+    *,
+    window: int = -1,
+    cache: dict | None = None,
+    kv_dtype=None,
+    return_kv: bool = False,
+    block_k: int = 1024,
+):
+    """Self-attention sublayer. With ``cache`` (decode) S == 1 and the KV
+    pair is written into the cache slot pos mod capacity before attending."""
+    b, s, _ = x.shape
+    q = dense(x, params["wq"], params.get("bq"))
+    k = dense(x, params["wk"], params.get("bk"))
+    v = dense(x, params["wv"], params.get("bv"))
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+
+    if cfg.mrope_sections is not None:
+        q = mrope(q, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+        k = mrope(k, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+        pos_1d = positions[..., 0]
+    elif cfg.rotary_pct > 0:
+        q = rope(q, positions, theta=cfg.rope_theta, rotary_pct=cfg.rotary_pct)
+        k = rope(k, positions, theta=cfg.rope_theta, rotary_pct=cfg.rotary_pct)
+        pos_1d = positions
+    else:
+        pos_1d = positions
+
+    kv_dtype = kv_dtype or k.dtype
+    if cache is not None:
+        cap = cache["k"].shape[1]
+        pos = pos_1d[0, 0]  # scalar decode position (uniform across batch)
+        slot = jnp.mod(pos, cap)
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["pos"], pos[None], (slot,))
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+        out = chunked_attention(q, ck, cv, pos_1d, cpos, causal=True,
+                                window=window, block_k=block_k)
+    else:
+        new_cache = None
+        kpos = pos_1d[0]  # [S]; training positions uniform across batch
+        out = chunked_attention(q, k.astype(kv_dtype), v.astype(kv_dtype),
+                                pos_1d, kpos, causal=True, window=window,
+                                block_k=block_k)
+
+    out = out.reshape(b, s, cfg.q_dim)
+    proj = dense(out, params["wo"])
+    if return_kv:
+        return proj, new_cache, (k, v)
+    return proj, new_cache

@@ -1,0 +1,178 @@
+"""Shared LM layers: norms, MLPs, embeddings, RoPE / M-RoPE.
+
+Math convention (the paper's storage/compute split, TPU-native): parameters
+live in the policy storage dtype; matmuls feed storage-dtype operands to the
+MXU with **f32 accumulation** (`preferred_element_type`); elementwise math,
+norms and softmax run in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense", "rmsnorm", "layernorm", "mlp_apply", "rope", "mrope",
+    "init_dense", "init_norm", "init_mlp", "set_act_dtype", "act",
+]
+
+# Activation dtype for the residual stream / projection outputs.
+# None (default) = f32: the paper-faithful softfp analogue.
+# bf16 = the beyond-paper optimized policy (§Perf lever A): halves HBM
+# traffic of every activation tensor while keeping f32 accumulation and
+# f32 norm/softmax internals. Trace-time constant — set before tracing.
+_ACT_DTYPE = [None]
+
+
+def set_act_dtype(dtype) -> None:
+    _ACT_DTYPE[0] = None if dtype in (None, jnp.float32) else dtype
+
+
+def act(x: jax.Array) -> jax.Array:
+    dt = _ACT_DTYPE[0]
+    return x if dt is None else x.astype(dt)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """x [.., K] @ w [K, N] with f32 accumulation; output in the activation
+    dtype (f32 paper-faithful; bf16 optimized)."""
+    comp = w.dtype if w.dtype in (jnp.float16, jnp.bfloat16) else jnp.float32
+    out = jnp.dot(x.astype(comp), w, preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return act(out)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return (xf - mu) * jax.lax.rsqrt(var + eps) * (
+        1.0 + scale.astype(jnp.float32)
+    ) + bias.astype(jnp.float32)
+
+
+def apply_norm(kind: str, x: jax.Array, p: dict) -> jax.Array:
+    # Internals in f32; output in the activation dtype — the sequence-
+    # parallel all-gather fires on this tensor, so its dtype sets the
+    # dominant training collective's width (§Perf cell 3).
+    if kind == "rmsnorm":
+        return act(rmsnorm(x, p["scale"]))
+    return act(layernorm(x, p["scale"], p["bias"]))
+
+
+# -- MLP variants ---------------------------------------------------------------
+
+
+def mlp_apply(kind: str, x: jax.Array, p: dict) -> jax.Array:
+    """x [.., D] -> [.., D]. kinds: swiglu | geglu | gelu | relu2."""
+    if kind in ("swiglu", "geglu"):
+        gate = dense(x, p["w_gate"])
+        up = dense(x, p["w_up"])
+        act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate)
+        return dense(act * up, p["w_down"])
+    h = dense(x, p["w_up"])
+    if kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(kind)
+    return dense(h, p["w_down"])
+
+
+# -- RoPE -------------------------------------------------------------------------
+
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions [..] -> angles [.., dim/2] (f32)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def _apply_rot(x: jax.Array, ang: jax.Array) -> jax.Array:
+    """Rotate pairs (x[..., ::2], x[..., 1::2]) by angles [.., dim/2]."""
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = x[..., ::2]
+    x2 = x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10000.0,
+         rotary_pct: float = 1.0) -> jax.Array:
+    """x [B, S, H, D], positions [B, S] -> rotated x (f32).
+
+    ``rotary_pct < 1`` rotates only the leading fraction of each head
+    (StableLM-style partial rotary)."""
+    d = x.shape[-1]
+    d_rot = int(d * rotary_pct) & ~1  # even
+    xf = x.astype(jnp.float32)
+    ang = _rope_angles(positions, d_rot, theta)[:, :, None, :]  # [B,S,1,dr/2]
+    if d_rot == d:
+        return _apply_rot(xf, ang)
+    head, tail = xf[..., :d_rot], xf[..., d_rot:]
+    return jnp.concatenate([_apply_rot(head, ang), tail], axis=-1)
+
+
+def mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, int, int],
+          *, theta: float = 10000.0) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. x [B, S, H, D]; positions [B, S, 3] (t, h, w).
+
+    The D/2 rotary frequencies are split into three contiguous sections that
+    take their rotation angle from the t/h/w position respectively.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    xf = x.astype(jnp.float32)
+    ang_t = _rope_angles(positions[..., 0], d, theta)  # [B,S,d/2]
+    ang_h = _rope_angles(positions[..., 1], d, theta)
+    ang_w = _rope_angles(positions[..., 2], d, theta)
+    s0, s1, _ = sections
+    sel = jnp.concatenate([
+        jnp.zeros((s0,), jnp.int32),
+        jnp.ones((s1,), jnp.int32),
+        jnp.full((d // 2 - s0 - s1,), 2, jnp.int32),
+    ])
+    ang = jnp.where(sel == 0, ang_t, jnp.where(sel == 1, ang_h, ang_w))
+    return _apply_rot(xf, ang[:, :, None, :])
+
+
+# -- initializers ------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, *, bias: bool = False,
+               scale: float | None = None) -> dict:
+    scale = scale if scale is not None else (1.0 / d_in) ** 0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    p = {"scale": jnp.zeros((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def init_mlp(key, kind: str, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": init_dense(ks[0], d_model, d_ff, dtype)["w"],
+            "w_up": init_dense(ks[1], d_model, d_ff, dtype)["w"],
+            "w_down": init_dense(ks[2], d_ff, d_model, dtype)["w"],
+        }
+    return {
+        "w_up": init_dense(ks[0], d_model, d_ff, dtype)["w"],
+        "w_down": init_dense(ks[1], d_ff, d_model, dtype)["w"],
+    }

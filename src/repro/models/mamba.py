@@ -1,0 +1,174 @@
+"""Mamba-1 block (falcon-mamba): selective SSM, TPU-adapted.
+
+Hardware adaptation (DESIGN.md §2): the CUDA reference fuses the selective
+scan into a custom kernel with recomputation; on TPU the train/prefill path
+uses ``jax.lax.associative_scan`` over the sequence (log-depth, MXU/VPU
+friendly) and decode is the O(1) single-step recurrence. The [B, S, Di, N]
+discretized-state tensor is the memory hot spot — it is sequence-sharded
+under the production mesh and rematerialized per layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import act, dense
+
+__all__ = ["init_mamba", "mamba_apply", "mamba_decode_step", "init_mamba_cache"]
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or -(-cfg.d_model // 16)
+    return d_in, dt_rank, s.d_state, s.d_conv
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
+    d_in, dt_rank, n, k = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    scale = (1.0 / d) ** 0.5
+    p = {
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * d_in), jnp.float32) * scale).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (k, d_in), jnp.float32) * 0.3).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (d_in, dt_rank + 2 * n), jnp.float32)
+                   * (1.0 / d_in) ** 0.5).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, d_in), jnp.float32)
+                    * (1.0 / dt_rank) ** 0.5).astype(dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (d_in,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))).astype(dtype),
+        # A initialized to -[1..N] per channel (S4D-real)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))).astype(jnp.float32),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[5], (d_in, d), jnp.float32)
+                     * (1.0 / d_in) ** 0.5).astype(dtype),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv. x [B, S, Di], w [K, Di]. init_state [B, K-1, Di]
+    prepends history (decode); else zero padding."""
+    k = w.shape[0]
+    if init_state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([init_state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K=4: four shifted adds, VPU-trivial
+        out = out + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+# §Perf lever (falcon-mamba train): 0 = single associative scan over S
+# (log2(S) levels of [B,S,Di,N] traffic); >0 = sequential scan over chunks
+# carrying the [B,Di,N] state, associative within each chunk — the TPU
+# analogue of the CUDA kernel's chunked recomputation. Trace-time constant.
+SSM_CHUNK = [0]
+
+
+def set_ssm_chunk(n: int) -> None:
+    SSM_CHUNK[0] = int(n)
+
+
+def _combine(a, b):
+    a1, b1 = a
+    a2, b2 = b
+    return a1 * a2, a2 * b1 + b2
+
+
+def _ssm_scan(deltaA: jax.Array, deltaBu: jax.Array) -> jax.Array:
+    """h_t = deltaA_t · h_{t-1} + deltaBu_t. inputs [B, S, Di, N] -> h."""
+    chunk = SSM_CHUNK[0]
+    s = deltaA.shape[1]
+    if chunk <= 0 or s <= chunk or s % chunk:
+        _, h = jax.lax.associative_scan(_combine, (deltaA, deltaBu), axis=1)
+        return h
+
+    n_chunks = s // chunk
+    b, _, di, n = deltaA.shape
+    da = jnp.moveaxis(deltaA.reshape(b, n_chunks, chunk, di, n), 1, 0)
+    db = jnp.moveaxis(deltaBu.reshape(b, n_chunks, chunk, di, n), 1, 0)
+
+    def body(h_in, xs):
+        a_c, b_c = xs  # [B, chunk, Di, N]
+        a_cum, b_cum = jax.lax.associative_scan(_combine, (a_c, b_c), axis=1)
+        h_c = a_cum * h_in[:, None] + b_cum  # prefix state folded in
+        return h_c[:, -1], h_c
+
+    h0 = jnp.zeros((b, di, n), deltaA.dtype)
+    _, hs = jax.lax.scan(body, h0, (da, db))
+    return jnp.moveaxis(hs, 0, 1).reshape(b, s, di, n)
+
+
+def mamba_apply(params: dict, x: jax.Array, cfg: ArchConfig,
+                return_state: bool = False):
+    """Full-sequence selective SSM. x [B, S, D] f32 -> [B, S, D] f32.
+
+    ``return_state`` additionally yields the decode cache ({'conv', 'ssm'})
+    at the final position (prefill)."""
+    d_in, dt_rank, n, k = _dims(cfg)
+    xz = dense(x, params["in_proj"])  # [B, S, 2*Di]
+    raw, z = jnp.split(xz, 2, axis=-1)
+    xin = jax.nn.silu(_causal_conv(raw, params["conv_w"], params["conv_b"]))
+
+    proj = dense(xin, params["x_proj"])  # [B, S, dt_rank + 2N]
+    dt, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(dense(dt, params["dt_proj"]) +
+                            params["dt_bias"].astype(jnp.float32))  # [B,S,Di]
+    a = -jnp.exp(params["A_log"])  # [Di, N]
+    deltaA = act(jnp.exp(delta[..., None] * a))  # [B, S, Di, N]
+    deltaBu = act((delta * xin)[..., None] * b_mat[..., None, :])  # [B,S,Di,N]
+    h = _ssm_scan(deltaA, deltaBu)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_mat) + params["D"] * xin
+    y = y * jax.nn.silu(z)
+    out = dense(y, params["out_proj"])
+    if return_state:
+        state = {"conv": raw[:, -(k - 1):], "ssm": h[:, -1]}
+        return out, state
+    return out, None
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    d_in, _, n, k = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, k - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, n), dtype),
+    }
+
+
+def mamba_decode_step(params: dict, x: jax.Array, cache: dict,
+                      cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """One-token recurrence. x [B, 1, D] -> ([B, 1, D], new cache).
+
+    ``cache['conv']`` holds the last K−1 *raw* (pre-conv) channel inputs."""
+    d_in, dt_rank, n, k = _dims(cfg)
+    xz = dense(x, params["in_proj"])
+    raw, z = jnp.split(xz, 2, axis=-1)  # [B, 1, Di]
+    conv_in = jnp.concatenate(
+        [cache["conv"].astype(raw.dtype), raw], axis=1)  # [B, K, Di]
+    conv_out = jnp.einsum("bkd,kd->bd", conv_in,
+                          params["conv_w"].astype(raw.dtype))
+    xin = jax.nn.silu(conv_out + params["conv_b"].astype(raw.dtype))[:, None]
+    new_conv = conv_in[:, 1:]  # last K-1 raw inputs
+
+    proj = dense(xin, params["x_proj"])
+    dt, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(dense(dt, params["dt_proj"]) +
+                            params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"])
+    deltaA = jnp.exp(delta[..., None] * a)[:, 0]  # [B, Di, N]
+    deltaBu = ((delta * xin)[..., None] * b_mat[..., None, :])[:, 0]
+    h = deltaA * cache["ssm"].astype(jnp.float32) + deltaBu  # [B, Di, N]
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0]) + params["D"] * xin[:, 0]
+    y = (y * jax.nn.silu(z[:, 0]))[:, None]
+    out = dense(y, params["out_proj"])
+    new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                 "ssm": h.astype(cache["ssm"].dtype)}
+    return out, new_cache

@@ -1,0 +1,119 @@
+"""Mixture-of-Experts layer: token-choice top-k with sort-based dispatch.
+
+Capacity-bucketed dispatch in the MaxText style: (token, k) assignments are
+sorted by expert, bucketed into a static [E, C, D] buffer (overflow drops),
+expert FFNs run as one batched einsum over E, and results scatter back.
+Everything is static-shape so it lowers cleanly at 512 devices; experts are
+sharded over the ``model`` axis (EP) so dispatch/combine lower to
+all-to-alls. Shared experts (Qwen2-MoE) are a plain MLP over all tokens.
+
+Router math in f32; expert weights in the storage dtype (paper policy).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import act, dense, init_mlp, mlp_apply
+
+__all__ = ["init_moe", "moe_apply"]
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.moe
+    ks = jax.random.split(key, 5)
+    d, f, e = cfg.d_model, m.d_expert, m.n_experts
+    scale = (1.0 / d) ** 0.5
+
+    def ew(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    p = {
+        "router": ew(ks[0], (d, e)),
+        "w_gate": ew(ks[1], (e, d, f)),
+        "w_up": ew(ks[2], (e, d, f)),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   * (1.0 / f) ** 0.5).astype(dtype),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(ks[4], cfg.mlp, d, m.d_shared, dtype)
+    return p
+
+
+def _dispatch_group(xg, eids, gates, *, e: int, cap: int):
+    """Per-group sort-based dispatch. xg [T, D]; eids/gates [T, K].
+    Returns (buf [E, C, D] f32, se, st, slot, keep_w) for combine."""
+    t, d = xg.shape
+    k = eids.shape[-1]
+    flat_e = eids.reshape(-1)  # [T*K]
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_g = gates.reshape(-1)
+    order = jnp.argsort(flat_e)  # stable; LOCAL to the group/shard
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[se]
+    keep = pos_in_e < cap  # overflow dropped
+    slot = jnp.where(keep, pos_in_e, cap)  # cap = spill row
+    buf = jnp.zeros((e, cap + 1, d), jnp.float32)
+    buf = buf.at[se, slot].add(xg[st])
+    return buf[:, :cap], se, st, slot, sg * keep.astype(jnp.float32)
+
+
+def _combine_group(eout, se, st, slot, wgt, *, t: int, cap: int):
+    gathered = eout[se, jnp.minimum(slot, cap - 1)] * wgt[:, None]
+    return jnp.zeros((t, eout.shape[-1]), jnp.float32).at[st].add(gathered)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: ArchConfig) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, D] f32 -> (out [B, S, D] f32, aux load-balance loss scalar).
+
+    Dispatch is grouped PER SEQUENCE (vmapped over B): the argsort/cumsum/
+    scatter stay local to the batch shard (no cross-device sort — a global
+    token sort forces XLA to replicate, blowing per-device temp memory),
+    and only the expert einsum crosses the EP axis (all-to-all).
+    """
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    cap = int(math.ceil(s * k / e * m.capacity_factor))
+
+    logits = dense(x, params["router"])  # [B, S, E] f32
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, eids = jax.lax.top_k(probs, k)  # [B, S, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Switch-style aux loss: E · Σ_e fraction_e · mean_prob_e
+    frac = jnp.mean(
+        jax.nn.one_hot(eids, e, dtype=jnp.float32).sum(axis=2), axis=(0, 1))
+    aux = e * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    xf32 = x.astype(jnp.float32)
+    buf, se, st, slot, wgt = jax.vmap(
+        lambda xg, ei, ga: _dispatch_group(xg, ei, ga, e=e, cap=cap)
+    )(xf32, eids, gate_vals)  # buf [B, E, C, D]
+
+    # batched expert FFN (EP over the model axis, groups over data)
+    comp = params["w_gate"].dtype if params["w_gate"].dtype in (
+        jnp.float16, jnp.bfloat16) else jnp.float32
+    bufc = buf.astype(comp)
+    gate = jnp.einsum("becd,edf->becf", bufc, params["w_gate"],
+                      preferred_element_type=jnp.float32)
+    up = jnp.einsum("becd,edf->becf", bufc, params["w_up"],
+                    preferred_element_type=jnp.float32)
+    hidden = jax.nn.silu(gate) if cfg.mlp in ("swiglu",) else jax.nn.gelu(gate)
+    hidden = (hidden * up).astype(comp)
+    eout = jnp.einsum("becf,efd->becd", hidden, params["w_down"],
+                      preferred_element_type=jnp.float32)  # [B, E, C, D]
+
+    out = jax.vmap(
+        lambda eo, se_, st_, sl_, w_: _combine_group(eo, se_, st_, sl_, w_,
+                                                     t=s, cap=cap)
+    )(eout, se, st, slot, wgt)  # [B, S, D]
+
+    if m.n_shared:
+        out = out + mlp_apply(cfg.mlp, x, params["shared"])
+    return act(out), aux

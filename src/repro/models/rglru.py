@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin), TPU-adapted.
+
+Recurrence (Griffin eq. 6–8): per channel,
+    r_t = σ(W_a x_t + b_a)                  recurrence gate
+    i_t = σ(W_x x_t + b_x)                  input gate
+    a_t = exp(−c · softplus(Λ) · r_t)       c = 8
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The block wraps the recurrence with a temporal conv (K=4) and a GeGLU-style
+output gate, Griffin-style. Train/prefill runs the linear recurrence with
+``associative_scan`` ([B, S, W] elements — N=1, much lighter than Mamba);
+decode is the single-step update carrying h [B, W].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense
+
+__all__ = ["init_rglru", "rglru_apply", "rglru_decode_step", "init_rglru_cache"]
+
+_C = 8.0
+
+
+def _width(cfg: ArchConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    w = _width(cfg)
+    ks = jax.random.split(key, 6)
+    scale = (1.0 / d) ** 0.5
+    sw = (1.0 / w) ** 0.5
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, w), jnp.float32) * scale).astype(dtype),
+        "gate_proj": (jax.random.normal(ks[1], (d, w), jnp.float32) * scale).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, w), jnp.float32) * 0.3).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": (jax.random.normal(ks[3], (w, w), jnp.float32) * sw).astype(dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": (jax.random.normal(ks[4], (w, w), jnp.float32) * sw).astype(dtype),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        # Λ init so that a ∈ (0.9, 0.999) at r = 1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)) / _C)),
+        "out_proj": (jax.random.normal(ks[0], (w, cfg.d_model), jnp.float32) * sw).astype(dtype),
+    }
+
+
+def _gates(params, xc):
+    r = jax.nn.sigmoid(dense(xc, params["w_a"]) + params["b_a"])
+    i = jax.nn.sigmoid(dense(xc, params["w_x"]) + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xc)
+    return a, gated_in
+
+
+def _conv4(x, w, b, hist=None):
+    k = w.shape[0]
+    if hist is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([hist.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def rglru_apply(params: dict, x: jax.Array, cfg: ArchConfig,
+                return_state: bool = False):
+    """Full-sequence recurrent block. x [B, S, D] f32 -> [B, S, D] f32."""
+    raw = dense(x, params["in_proj"])  # [B, S, W]
+    gate = dense(x, params["gate_proj"])
+    xc = _conv4(raw, params["conv_w"], params["conv_b"])
+    a, gated_in = _gates(params, xc)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated_in), axis=1)
+    y = h * jax.nn.gelu(gate)
+    out = dense(y, params["out_proj"])
+    if return_state:
+        return out, {"h": h[:, -1], "conv": raw[:, -3:]}
+    return out, None
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype) -> dict:
+    w = _width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), dtype),
+        "conv": jnp.zeros((batch, 3, w), dtype),  # K-1 raw conv inputs
+    }
+
+
+def rglru_decode_step(params: dict, x: jax.Array, cache: dict,
+                      cfg: ArchConfig) -> tuple[jax.Array, dict]:
+    """One-token recurrence. x [B, 1, D] -> ([B, 1, D], new cache)."""
+    xc = dense(x, params["in_proj"])  # [B, 1, W]
+    gate = dense(x, params["gate_proj"])
+    conv_in = jnp.concatenate([cache["conv"].astype(xc.dtype), xc], axis=1)
+    co = jnp.einsum("bkw,kw->bw", conv_in, params["conv_w"].astype(xc.dtype))
+    xcc = (co + params["conv_b"].astype(xc.dtype))[:, None]
+    a, gated_in = _gates(params, xcc)  # [B, 1, W]
+    h = a[:, 0] * cache["h"].astype(jnp.float32) + gated_in[:, 0]
+    y = (h[:, None]) * jax.nn.gelu(gate)
+    out = dense(y, params["out_proj"])
+    new_cache = {"h": h.astype(cache["h"].dtype),
+                 "conv": conv_in[:, 1:].astype(cache["conv"].dtype)}
+    return out, new_cache

@@ -1,0 +1,381 @@
+"""Task builders: train_step / prefill_step / decode_step per (arch × shape).
+
+Each builder returns a :class:`Task`: the pure step function, its input
+ShapeDtypeStructs (no allocation — the dry-run pattern), and the
+in/out sharding pytrees for the production mesh. The same builders back the
+real training/serving drivers with concrete arrays.
+
+Memory-critical choices (these are what make the 40 cells fit 16 GB/chip):
+  * chunked cross-entropy — full [B, S, V] logits never materialize
+  * scan-over-layers + remat
+  * optional sequence-sharded residual stream (Megatron-SP analogue)
+  * optional microbatched gradient accumulation
+  * KV caches and parameters in the policy storage dtype (the paper's fp16)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import mesh as meshlib
+from repro.models import transformer as tf
+from repro.models.layers import dense, set_act_dtype
+from repro.optim.adamw import (
+    AdamWConfig, OptState, ScaleState, adamw_init, adamw_update, scale_init,
+    scale_update,
+)
+from repro.precision import PrecisionPolicy, get_policy
+
+__all__ = ["Task", "build_task", "input_specs", "train_state_specs",
+           "init_train_state", "chunked_ce"]
+
+
+@dataclasses.dataclass
+class Task:
+    name: str
+    kind: str  # train | prefill | decode
+    fn: Callable
+    args: tuple  # ShapeDtypeStruct pytrees, one per positional arg
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+# -- inputs ---------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the model inputs of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.frontend == "vision":
+        p = cfg.n_patches
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, s - p), jnp.int32),
+            "patch_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model), jnp.bfloat16),
+            "positions": jax.ShapeDtypeStruct((b, s, 3), jnp.int32),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def _fill_positions(cfg: ArchConfig, batch: dict) -> dict:
+    """Materialize default positions when the batch doesn't carry them."""
+    if "positions" in batch:
+        return batch
+    b, s = batch["tokens"].shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    return dict(batch, positions=pos)
+
+
+# -- loss --------------------------------------------------------------------------
+
+
+def chunked_ce(params, cfg: ArchConfig, h: jax.Array, targets: jax.Array,
+               mask: jax.Array, *, chunk: int = 512) -> jax.Array:
+    """Cross-entropy over the vocab without materializing [B, S, V].
+
+    Scans S in chunks; each chunk's logits ([B, c, V], vocab-sharded over
+    ``model``) are consumed by logsumexp + target gather and rematerialized
+    in the backward pass.
+    """
+    b, s, d = h.shape
+    c = min(chunk, s)
+    pad = -s % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = (s + pad) // c
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    hs = jnp.moveaxis(h.reshape(b, n, c, d), 1, 0)
+    ts = jnp.moveaxis(targets.reshape(b, n, c), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, n, c), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hc, tc, mc = xs
+        # logits may be bf16 under the optimized policy; the CE reduction
+        # itself always runs in f32 (loss correctness is policy-invariant).
+        logits = dense(hc, w).astype(jnp.float32)  # [B, c, V]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        nll = jnp.sum((lse - tgt) * mc)
+        return carry + nll, None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hs, ts, ms))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# -- train state ---------------------------------------------------------------------
+
+
+def init_train_state(cfg: ArchConfig, policy: PrecisionPolicy, seed: int = 0,
+                     opt_cfg: AdamWConfig = AdamWConfig()) -> dict:
+    master = tf.init_params(cfg, jax.random.key(seed), get_policy("fp32"))
+    params = jax.tree.map(lambda x: x.astype(policy.param_storage), master)
+    state = {
+        "params": params,
+        "opt": adamw_init(master),
+        "scale": scale_init(policy.loss_scale),
+    }
+    state["master"] = master if policy.master_fp32 else None
+    return state
+
+
+def train_state_specs(cfg: ArchConfig, policy: PrecisionPolicy) -> dict:
+    return jax.eval_shape(lambda: init_train_state(cfg, policy))
+
+
+def _state_pspecs(state_specs, mesh: Mesh):
+    def rule(path, leaf):
+        # DictKey has .key, GetAttrKey (NamedTuple fields) has .name.
+        keys = [getattr(p, "key", None) or getattr(p, "name", None) or str(p)
+                for p in path]
+        if keys and keys[0] in ("params", "master"):
+            spec = meshlib.param_pspec(path[1:], leaf, mesh)
+        elif len(keys) > 1 and keys[0] == "opt" and keys[1] in ("m", "v"):
+            spec = meshlib.param_pspec(path[2:], leaf, mesh)
+        else:
+            return P()
+        # argument shardings must divide exactly (granite's vocab 49155, ...)
+        return meshlib.fit_spec(spec, getattr(leaf, "shape", ()), mesh)
+
+    paths = jax.tree_util.tree_flatten_with_path(state_specs)[0]
+    treedef = jax.tree_util.tree_structure(state_specs)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, l) for p, l in paths])
+
+
+# -- step functions ------------------------------------------------------------------
+
+
+def _make_shard_fn(mesh: Mesh | None, seq_shard: bool):
+    if mesh is None:
+        return lambda x: x
+    d = meshlib.data_axes(mesh)
+    spec = P(d, "model", None) if seq_shard else P(d, None, None)
+    ns = NamedSharding(mesh, spec)
+    return lambda x: jax.lax.with_sharding_constraint(x, ns)
+
+
+def make_train_step(cfg: ArchConfig, policy: PrecisionPolicy, *,
+                    mesh: Mesh | None = None, seq_shard: bool = True,
+                    remat: bool = True, microbatch: int = 1,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    aux_weight: float = 0.01, ce_chunk: int = 512,
+                    attn_block_k: int = 1024, unroll: bool = False):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    set_act_dtype(policy.compute)
+    shard = _make_shard_fn(mesh, seq_shard)
+
+    # Pin the master->storage cast to the master's own sharding, so FSDP
+    # all-gathers move fp16 (storage) bytes, not the f32 master — without
+    # this GSPMD may gather-then-cast, doubling the dominant collective.
+    if mesh is not None:
+        _pspecs = meshlib.tree_pspecs(
+            jax.eval_shape(lambda: tf.init_params(
+                cfg, jax.random.key(0), get_policy("fp32"))),
+            mesh, meshlib.param_pspec)
+
+        def _cast(master):
+            return jax.tree.map(
+                lambda x, sp: jax.lax.with_sharding_constraint(
+                    x.astype(policy.param_storage), NamedSharding(mesh, sp)),
+                master, _pspecs)
+    else:
+        def _cast(master):
+            return jax.tree.map(
+                lambda x: x.astype(policy.param_storage), master)
+
+    def loss_fn(master, batch, scale):
+        params = _cast(master)
+        full = _fill_positions(cfg, batch)
+        h, aux = tf.forward(params, cfg, full, shard=shard, remat=remat,
+                            unroll=unroll, attn_block_k=attn_block_k)
+        tokens = full["tokens"]
+        if cfg.frontend == "vision":
+            h = h[:, cfg.n_patches:]  # loss only over text positions
+        targets = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:], jnp.float32),
+             jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1)
+        loss = chunked_ce(params, cfg, h, targets, mask, chunk=ce_chunk)
+        loss = loss + aux_weight * aux
+        return loss * scale, loss
+
+    def train_step(state, batch):
+        master = state["master"] if state["master"] is not None else state["params"]
+        scale = state["scale"].scale
+
+        if microbatch > 1:
+            def micro_body(acc, mb):
+                (g_acc, l_acc) = acc
+                (_, loss), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(master, mb, scale)
+                return (jax.tree.map(jnp.add, g_acc, grads),
+                        l_acc + loss), None
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((microbatch, x.shape[0] // microbatch)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), master)
+            (grads, loss), _ = jax.lax.scan(
+                micro_body, (zeros, jnp.float32(0.0)), mb_batch)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = loss / microbatch
+        else:
+            (_, loss), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(master, batch, scale)
+
+        if mesh is not None:
+            # Force the cross-shard gradient reduction to land directly in
+            # the master layout (reduce-scatter, not all-gather of full dW).
+            grads = jax.tree.map(
+                lambda g, sp: jax.lax.with_sharding_constraint(
+                    g, NamedSharding(mesh, sp)), grads, _pspecs)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) / scale, grads)
+        finite = jnp.all(jnp.asarray(
+            [jnp.all(jnp.isfinite(g)) for g in jax.tree.leaves(grads)]))
+        new_master, new_opt, gnorm = adamw_update(
+            opt_cfg, grads, state["opt"], master, skip=~finite)
+        new_scale = scale_update(state["scale"], finite)
+        new_params = jax.tree.map(
+            lambda x: x.astype(policy.param_storage), new_master)
+        new_state = {
+            "params": new_params,
+            "master": new_master if state["master"] is not None else None,
+            "opt": new_opt,
+            "scale": new_scale,
+        }
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "loss_scale": new_scale.scale,
+                   "skipped": (~finite).astype(jnp.float32)}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, policy: PrecisionPolicy, *,
+                      mesh: Mesh | None = None, seq_shard: bool = True,
+                      collect_cache: bool = False, cache_len: int = 0,
+                      attn_block_k: int = 1024, unroll: bool = False):
+    set_act_dtype(policy.compute)
+    shard = _make_shard_fn(mesh, seq_shard)
+
+    def prefill_step(params, batch):
+        full = _fill_positions(cfg, batch)
+        out = tf.forward(params, cfg, full, shard=shard, remat=False,
+                         collect_cache=collect_cache, cache_len=cache_len,
+                         cache_dtype=policy.state_storage,
+                         unroll=unroll, attn_block_k=attn_block_k)
+        if collect_cache:
+            h, _, cache = out
+            return tf.lm_logits(params, cfg, h[:, -1]), cache
+        h, _ = out
+        return tf.lm_logits(params, cfg, h[:, -1])
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, policy: PrecisionPolicy, *,
+                     attn_block_k: int = 1024, unroll: bool = False):
+    set_act_dtype(policy.compute)
+
+    def decode_fn(params, cache, token, pos):
+        return tf.decode_step(params, cfg, cache, token, pos,
+                              unroll=unroll, attn_block_k=attn_block_k)
+
+    return decode_fn
+
+
+# -- cell assembly ----------------------------------------------------------------------
+
+
+def build_task(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+               policy: PrecisionPolicy | str = "fp16", *,
+               seq_shard: bool = True, microbatch: int | None = None,
+               ce_chunk: int = 512, attn_block_k: int = 1024,
+               unroll: bool = False) -> Task:
+    """Assemble the (arch × shape) cell for the dry-run / drivers."""
+    if isinstance(policy, str):
+        policy = get_policy(policy)
+    d = meshlib.data_axes(mesh)
+    batch_specs = input_specs(cfg, shape)
+    batch_shardings = meshlib.named(meshlib.batch_pspecs(batch_specs, mesh), mesh)
+    param_specs = jax.eval_shape(
+        lambda: tf.init_params(cfg, jax.random.key(0), policy))
+    param_shard = meshlib.named(
+        meshlib.tree_pspecs(param_specs, mesh, meshlib.param_pspec), mesh)
+
+    if shape.kind == "train":
+        if microbatch is None:
+            microbatch = 1
+        step = make_train_step(cfg, policy, mesh=mesh, seq_shard=seq_shard,
+                               microbatch=microbatch, ce_chunk=ce_chunk,
+                               attn_block_k=attn_block_k, unroll=unroll)
+        state_specs = train_state_specs(cfg, policy)
+        state_shard = meshlib.named(_state_pspecs(state_specs, mesh), mesh)
+        metric_shard = {k: NamedSharding(mesh, P()) for k in
+                        ("loss", "grad_norm", "loss_scale", "skipped")}
+        return Task(
+            name=f"{cfg.name}:{shape.name}", kind="train", fn=step,
+            args=(state_specs, batch_specs),
+            in_shardings=(state_shard, batch_shardings),
+            out_shardings=(state_shard, metric_shard),
+            donate_argnums=(0,),
+        )
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, policy, mesh=mesh, seq_shard=seq_shard,
+                                 attn_block_k=attn_block_k, unroll=unroll)
+        logits_shard = NamedSharding(
+            mesh, meshlib.fit_spec(
+                P(d, "model"), (shape.global_batch, cfg.vocab_size), mesh))
+        return Task(
+            name=f"{cfg.name}:{shape.name}", kind="prefill", fn=step,
+            args=(param_specs, batch_specs),
+            in_shardings=(param_shard, batch_shardings),
+            out_shardings=logits_shard,
+        )
+
+    # decode
+    step = make_decode_step(cfg, policy, attn_block_k=attn_block_k,
+                            unroll=unroll)
+    cache_specs = tf.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                policy.state_storage, as_specs=True)
+    cache_shard = meshlib.named(
+        meshlib.tree_pspecs(cache_specs, mesh, meshlib.cache_pspec), mesh)
+    io = input_specs(cfg, shape)
+    b = shape.global_batch
+    token_shard = NamedSharding(
+        mesh, meshlib.fit_spec(P(d, None), (b, 1), mesh))
+    pos_shard = NamedSharding(mesh, P())
+    logits_shard = NamedSharding(
+        mesh, meshlib.fit_spec(P(d, "model"), (b, cfg.vocab_size), mesh))
+    return Task(
+        name=f"{cfg.name}:{shape.name}", kind="decode", fn=step,
+        args=(param_specs, cache_specs, io["token"], io["pos"]),
+        in_shardings=(param_shard, cache_shard, token_shard, pos_shard),
+        out_shardings=(logits_shard, cache_shard),
+        donate_argnums=(1,),
+    )

@@ -1,0 +1,318 @@
+"""Config-driven decoder assembly for all assigned architectures.
+
+One generic decoder covering: dense GQA transformers (qwen2.5, minitron,
+smollm, stablelm), MoE (granite, qwen2-moe), pure SSM (falcon-mamba),
+RG-LRU hybrid (recurrentgemma), audio-token decoder (musicgen, sinusoidal
+positions) and VLM (qwen2-vl, M-RoPE + stub patch embeddings).
+
+Homogeneous stacks are scanned (stacked [L, ...] leaves + remat) so a
+64-layer model lowers to a compact HLO; the 1:2 hybrid loops per layer.
+Parameters are initialized directly in the precision policy's storage dtype
+(fp16 under the paper's policy).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import attention, init_attention, init_kv_cache
+from repro.models.layers import act, apply_norm, init_mlp, init_norm, mlp_apply, dense
+from repro.models.mamba import (
+    init_mamba, init_mamba_cache, mamba_apply, mamba_decode_step,
+)
+from repro.models.moe import init_moe, moe_apply
+from repro.models.rglru import (
+    init_rglru, init_rglru_cache, rglru_apply, rglru_decode_step,
+)
+
+__all__ = ["init_params", "forward", "decode_step", "init_cache", "lm_logits"]
+
+Identity: Callable[[jax.Array], jax.Array] = lambda x: x
+
+
+# -- init ------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ArchConfig, i: int, dtype) -> dict:
+    kind = cfg.layer_kind(i)
+    ks = jax.random.split(key, 3)
+    p: dict[str, Any] = {"norm1": init_norm(cfg.norm, cfg.d_model, jnp.float32)}
+    if kind == "attn":
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+    elif kind == "ssm":
+        p["ssm"] = init_mamba(ks[0], cfg, dtype)
+        return p  # mamba block is norm + mixer only
+    elif kind == "rglru":
+        p["rglru"] = init_rglru(ks[0], cfg, dtype)
+    p["norm2"] = init_norm(cfg.norm, cfg.d_model, jnp.float32)
+    if cfg.moe is not None:
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.mlp, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, policy) -> dict:
+    dtype = policy.param_storage
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    scale = (1.0 / cfg.d_model) ** 0.5
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * scale).astype(dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab_size), jnp.float32) * scale).astype(dtype)
+    lkeys = jax.random.split(k_layers, cfg.n_layers)
+    layers = [_init_layer(lkeys[i], cfg, i, dtype) for i in range(cfg.n_layers)]
+    if cfg.homogeneous:
+        params["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    else:
+        params["layers"] = tuple(layers)
+    return params
+
+
+# -- blocks -----------------------------------------------------------------------
+
+
+def _block_full(layer_p, h, positions, cfg: ArchConfig, kind: str,
+                shard: Callable, window: int, collect: bool = False,
+                cache_len: int = 0, cache_dtype=jnp.float16,
+                block_k: int = 1024):
+    """Full-sequence block (train/prefill). Returns (h, aux, cache|None)."""
+    aux = jnp.float32(0.0)
+    cache = None
+    x = apply_norm(cfg.norm, h, layer_p["norm1"])
+    if kind == "attn":
+        mix, _, kv = attention(layer_p["attn"], x, positions, cfg,
+                               window=window, return_kv=True,
+                               block_k=block_k)
+        if collect:
+            cache = {"kv": _pack_kv(kv, positions, window, cache_len, cache_dtype)}
+    elif kind == "ssm":
+        mix, st = mamba_apply(layer_p["ssm"], x, cfg, return_state=collect)
+        if collect:
+            cache = {"ssm": jax.tree.map(lambda a: a.astype(cache_dtype), st)}
+        return shard(h + mix), aux, cache
+    elif kind == "rglru":
+        mix, st = rglru_apply(layer_p["rglru"], x, cfg, return_state=collect)
+        if collect:
+            cache = {"rglru": jax.tree.map(lambda a: a.astype(cache_dtype), st)}
+    h = shard(h + mix)
+    x = apply_norm(cfg.norm, h, layer_p["norm2"])
+    if cfg.moe is not None:
+        y, aux = moe_apply(layer_p["moe"], x, cfg)
+    else:
+        y = mlp_apply(cfg.mlp, x, layer_p["mlp"])
+    return shard(h + y), aux, cache
+
+
+def _pack_kv(kv, positions, window: int, cache_len: int, dtype):
+    """Pack full-sequence (k, v) into a decode cache buffer of ``cache_len``
+    slots (ring layout when a local window applies)."""
+    k, v = kv  # [B, S, H, Dh]
+    s = k.shape[1]
+    pos = positions[0] if positions.ndim == 2 else positions[0, :, 0]  # [S]
+    if window > 0 and cache_len <= window:
+        keep = min(cache_len, s)
+        k, v, pos = k[:, -keep:], v[:, -keep:], pos[-keep:]
+        # ring layout: slot = pos mod cache_len
+        slots = jnp.mod(pos, cache_len)
+        buf_k = jnp.zeros((k.shape[0], cache_len) + k.shape[2:], dtype)
+        buf_v = jnp.zeros_like(buf_k)
+        buf_p = jnp.full((cache_len,), -1, jnp.int32)
+        buf_k = buf_k.at[:, slots].set(k.astype(dtype))
+        buf_v = buf_v.at[:, slots].set(v.astype(dtype))
+        buf_p = buf_p.at[slots].set(pos)
+        return {"k": buf_k, "v": buf_v, "pos": buf_p}
+    pad = cache_len - s
+    return {
+        "k": jnp.pad(k.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0))),
+        "pos": jnp.pad(pos, (0, pad), constant_values=-1),
+    }
+
+
+def _block_decode(layer_p, h, cache_l, positions, cfg: ArchConfig, kind: str,
+                  window: int, block_k: int = 1024):
+    x = apply_norm(cfg.norm, h, layer_p["norm1"])
+    if kind == "attn":
+        mix, new_kv = attention(layer_p["attn"], x, positions, cfg,
+                                window=window, cache=cache_l["kv"],
+                                block_k=block_k)
+        new_cache = {"kv": new_kv}
+    elif kind == "ssm":
+        mix, new_ssm = mamba_decode_step(layer_p["ssm"], x, cache_l["ssm"], cfg)
+        return h + mix, {"ssm": new_ssm}
+    elif kind == "rglru":
+        mix, new_r = rglru_decode_step(layer_p["rglru"], x, cache_l["rglru"], cfg)
+        new_cache = {"rglru": new_r}
+    h = h + mix
+    x = apply_norm(cfg.norm, h, layer_p["norm2"])
+    if cfg.moe is not None:
+        y, _ = moe_apply(layer_p["moe"], x, cfg)
+    else:
+        y = mlp_apply(cfg.mlp, x, layer_p["mlp"])
+    return h + y, new_cache
+
+
+# -- embeddings ---------------------------------------------------------------------
+
+
+def _sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """positions [B, S] -> [B, S, d] f32 (musicgen-style absolute)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Returns (h [B, S, D] f32, positions)."""
+    tokens = batch["tokens"]
+    h = act(jnp.take(params["embed"], tokens, axis=0).astype(jnp.float32))
+    if cfg.frontend == "vision":
+        # Stub modality frontend: precomputed patch embeddings prefix.
+        h = jnp.concatenate([batch["patch_embeds"].astype(jnp.float32), h], axis=1)
+    positions = batch["positions"]
+    if cfg.rotary_pct == 0.0 and cfg.mrope_sections is None:
+        h = h + _sinusoidal(positions, cfg.d_model)
+    return h, positions
+
+
+# -- full-sequence forward -------------------------------------------------------------
+
+
+def forward(params, cfg: ArchConfig, batch: dict, *,
+            shard: Callable = Identity, remat: bool = True,
+            collect_cache: bool = False, cache_len: int = 0,
+            cache_dtype=jnp.float16, unroll: bool = False,
+            attn_block_k: int = 1024):
+    """Train/prefill forward.
+
+    Returns (hidden [B, S, D] f32, aux loss[, cache]) — the cache (prefill)
+    is the decode-ready pytree matching :func:`init_cache`.
+
+    ``unroll=True`` unrolls the layer scan (analysis lowering: XLA's
+    HloCostAnalysis visits while bodies once, so the roofline pass compiles
+    an unrolled twin to get exact FLOP/collective totals).
+    """
+    h, positions = _embed_inputs(params, cfg, batch)
+    h = shard(h)
+    window = cfg.hybrid.window if cfg.hybrid is not None else -1
+
+    if cfg.homogeneous:
+        kind = cfg.layer_kind(0)
+
+        def body(carry, layer_p):
+            new_h, aux, cache = _block_full(
+                layer_p, carry, positions, cfg, kind, shard, window,
+                collect=collect_cache, cache_len=cache_len,
+                cache_dtype=cache_dtype, block_k=attn_block_k)
+            return new_h, (aux, cache)
+
+        if remat:
+            body = jax.checkpoint(body)
+        h, (auxs, cache) = jax.lax.scan(body, h, params["layers"],
+                                        unroll=cfg.n_layers if unroll else 1)
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.float32(0.0)
+        caches = []
+        for i, layer_p in enumerate(params["layers"]):
+            block = partial(_block_full, cfg=cfg, shard=shard, window=window,
+                            kind=cfg.layer_kind(i), collect=collect_cache,
+                            cache_len=cache_len, cache_dtype=cache_dtype,
+                            block_k=attn_block_k)
+            if remat:
+                block = jax.checkpoint(block)
+            h, a, c = block(layer_p, h, positions)
+            aux = aux + a
+            caches.append(c)
+        cache = tuple(caches)
+    h = apply_norm(cfg.norm, h, params["final_norm"])
+    if collect_cache:
+        return h, aux, cache
+    return h, aux
+
+
+def lm_logits(params, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    """h [.., D] -> logits [.., V] (f32 accumulate)."""
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return dense(h, w)
+
+
+# -- decode -----------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, capacity: int, dtype,
+               as_specs: bool = False) -> Any:
+    """Cache pytree for one decode stream of ``capacity`` context.
+
+    ``as_specs=True`` returns ShapeDtypeStructs via ``eval_shape`` — nothing
+    is allocated (a decode_32k cache is hundreds of GB globally)."""
+    if as_specs:
+        return jax.eval_shape(
+            lambda: init_cache(cfg, batch, capacity, dtype, as_specs=False))
+
+    def layer_cache(i: int):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            cap = capacity
+            if cfg.hybrid is not None:
+                cap = min(capacity, cfg.hybrid.window)  # ring buffer
+            return {"kv": init_kv_cache(cfg, batch, cap, dtype)}
+        if kind == "ssm":
+            return {"ssm": init_mamba_cache(cfg, batch, dtype)}
+        return {"rglru": init_rglru_cache(cfg, batch, dtype)}
+
+    caches = [layer_cache(i) for i in range(cfg.n_layers)]
+    if cfg.homogeneous:
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    return tuple(caches)
+
+
+def decode_step(params, cfg: ArchConfig, cache, token: jax.Array,
+                pos: jax.Array, *, unroll: bool = False,
+                attn_block_k: int = 1024) -> tuple[jax.Array, Any]:
+    """One serving step: token [B, 1] int32, pos scalar int32 ->
+    (logits [B, V] f32, new cache)."""
+    b = token.shape[0]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos, (b, 1, 3)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    # Decode never sees modality prefixes (they were consumed at prefill).
+    h = jnp.take(params["embed"], token, axis=0).astype(jnp.float32)
+    if cfg.rotary_pct == 0.0 and cfg.mrope_sections is None:
+        h = h + _sinusoidal(positions, cfg.d_model)
+    window = cfg.hybrid.window if cfg.hybrid is not None else -1
+
+    if cfg.homogeneous:
+        kind = cfg.layer_kind(0)
+
+        def body(carry, xs):
+            layer_p, cache_l = xs
+            new_h, new_c = _block_decode(layer_p, carry, cache_l, positions,
+                                         cfg, kind, window,
+                                         block_k=attn_block_k)
+            return new_h, new_c
+
+        h, new_cache = jax.lax.scan(body, h, (params["layers"], cache),
+                                    unroll=cfg.n_layers if unroll else 1)
+    else:
+        new_layers = []
+        for i, (layer_p, cache_l) in enumerate(zip(params["layers"], cache)):
+            h, nc = _block_decode(layer_p, h, cache_l, positions, cfg,
+                                  cfg.layer_kind(i), window,
+                                  block_k=attn_block_k)
+            new_layers.append(nc)
+        new_cache = tuple(new_layers)
+    h = apply_norm(cfg.norm, h, params["final_norm"])
+    logits = lm_logits(params, cfg, h[:, 0])
+    return logits, new_cache

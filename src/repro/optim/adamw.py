@@ -1,0 +1,122 @@
+"""AdamW with fp32 master weights, global-norm clipping, dynamic loss scaling.
+
+The training-side completion of the paper's storage/compute split: the
+*deployed* parameters live in the storage dtype (fp16), the optimizer keeps
+f32 masters and moments (sharded over the whole mesh, ZeRO-style, via the
+sharding rules), and fp16 gradients are protected by dynamic loss scaling.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "ScaleState", "adamw_init", "adamw_update",
+           "scale_init", "global_norm"]
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    step: jax.Array
+
+
+class ScaleState(NamedTuple):
+    """Dynamic loss scaling (fp16 policy)."""
+
+    scale: jax.Array  # current loss scale (f32)
+    good_steps: jax.Array  # consecutive finite steps (int32)
+
+
+def adamw_init(master: dict) -> OptState:
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), t)
+    return OptState(m=zeros(master), v=zeros(master), step=jnp.int32(0))
+
+
+def scale_init(initial: float | None) -> ScaleState:
+    return ScaleState(
+        scale=jnp.float32(initial if initial else 1.0),
+        good_steps=jnp.int32(0),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads: dict,
+    opt: OptState,
+    master: dict,
+    *,
+    skip: jax.Array | None = None,
+) -> tuple[dict, OptState, jax.Array]:
+    """One AdamW step on the f32 masters. ``skip`` (nonfinite grads under
+    loss scaling) freezes everything. Returns (master', opt', grad_norm)."""
+    gnorm = global_norm(grads)
+    denom = jnp.maximum(1.0, gnorm / cfg.clip_norm)
+    step = opt.step + 1
+    lr = _lr_at(cfg, step)
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) / denom
+        m2 = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        mh = m2 / c1
+        vh = v2 / c2
+        p2 = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return m2, v2, p2
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt.m)
+    flat_v = treedef.flatten_up_to(opt.v)
+    flat_p = treedef.flatten_up_to(master)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    m2 = jax.tree.unflatten(treedef, [o[0] for o in out])
+    v2 = jax.tree.unflatten(treedef, [o[1] for o in out])
+    p2 = jax.tree.unflatten(treedef, [o[2] for o in out])
+
+    if skip is not None:
+        keep = lambda new, old: jax.tree.map(
+            lambda a, b: jnp.where(skip, b, a), new, old)
+        m2, v2, p2 = keep(m2, opt.m), keep(v2, opt.v), keep(p2, master)
+        step = jnp.where(skip, opt.step, step)
+    return p2, OptState(m=m2, v=v2, step=step), gnorm
+
+
+def scale_update(s: ScaleState, finite: jax.Array, *, growth_interval: int = 2000,
+                 factor: float = 2.0, max_scale: float = 2.0**24) -> ScaleState:
+    """Dynamic scaler: halve on overflow, double after N clean steps."""
+    new_scale = jnp.where(
+        finite,
+        jnp.where(s.good_steps + 1 >= growth_interval,
+                  jnp.minimum(s.scale * factor, max_scale), s.scale),
+        jnp.maximum(s.scale / factor, 1.0),
+    )
+    new_good = jnp.where(
+        finite,
+        jnp.where(s.good_steps + 1 >= growth_interval, 0, s.good_steps + 1),
+        0,
+    )
+    return ScaleState(scale=new_scale, good_steps=new_good.astype(jnp.int32))

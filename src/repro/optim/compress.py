@@ -1,0 +1,68 @@
+"""Cross-pod gradient compression — the DCN axis is ~10× slower than ICI.
+
+The intra-pod reductions stay in GSPMD's hands (it overlaps them with the
+backward pass); the *cross-pod* all-reduce is the expensive one, so we give
+it an explicit, compressed path: quantize the gradient tree to bf16 or
+int8+f32-scale, psum over the ``pod`` axis, dequantize. Used from a
+``shard_map`` that is manual over ``pod`` only (data/model stay automatic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_tree", "decompress_tree", "psum_compressed"]
+
+
+def compress_tree(tree, method: str):
+    """method: 'bf16' | 'int8'. int8 leaves become (int8 data, f32 scale)."""
+    if method == "bf16":
+        return jax.tree.map(lambda x: x.astype(jnp.bfloat16), tree)
+    if method == "int8":
+        def q(x):
+            xf = x.astype(jnp.float32)
+            amax = jnp.max(jnp.abs(xf))
+            scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+            return (jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8),
+                    scale)
+        return jax.tree.map(q, tree)
+    raise ValueError(method)
+
+
+def decompress_tree(tree, method: str, like):
+    if method == "bf16":
+        return jax.tree.map(lambda x, ref: x.astype(ref.dtype), tree, like)
+    if method == "int8":
+        return jax.tree.map(
+            lambda qs, ref: (qs[0].astype(jnp.float32) * qs[1]).astype(ref.dtype),
+            tree, like, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and getattr(x[0], "dtype", None) == jnp.int8)
+    raise ValueError(method)
+
+
+def psum_compressed(tree, axis: str, method: str | None):
+    """All-reduce ``tree`` over ``axis`` with optional compression.
+
+    int8 psums the int8 payload in int32 (exact) and averages the scales —
+    an unbiased estimator of the mean gradient across pods.
+    """
+    n = jax.lax.psum(1, axis)
+    if method is None:
+        return jax.tree.map(lambda x: jax.lax.psum(x, axis) / n, tree)
+    if method == "bf16":
+        return jax.tree.map(
+            lambda x: (jax.lax.psum(x.astype(jnp.bfloat16).astype(jnp.float32),
+                                    axis) / n).astype(x.dtype),
+            tree)
+    if method == "int8":
+        def allreduce(x):
+            xf = x.astype(jnp.float32)
+            # Agree on one scale first (scalar max-reduce), then the int8
+            # payload sums EXACTLY in int32 — unbiased by construction.
+            amax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis)
+            scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+            q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int32)
+            total = jax.lax.psum(q, axis).astype(jnp.float32)
+            return (total * scale / n).astype(x.dtype)
+        return jax.tree.map(allreduce, tree)
+    raise ValueError(method)

@@ -1,0 +1,209 @@
+"""Precision policies — the paper's FP16-storage technique as a first-class knob.
+
+The paper stores CARLsim's synaptic data as IEEE binary16 while arithmetic is
+promoted to f32 (ARM softfp promotes ``__fp16`` operands). We generalize that
+into a :class:`PrecisionPolicy`: a *storage* dtype for data at rest (synapses,
+LM parameters, KV caches, optimizer moments) and a *compute* dtype that data
+is up-cast to before math. ``fp16`` reproduces the paper; ``fp32`` is the
+paper's reference; ``bf16``/``int8`` are beyond-paper extensions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PrecisionPolicy",
+    "get_policy",
+    "POLICIES",
+    "store_tree",
+    "load_tree",
+    "tree_bytes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Storage/compute dtype assignment, mirroring the paper's FP16 port.
+
+    Attributes:
+      name: registry key.
+      param_storage: dtype of parameters/synaptic weights at rest.
+      state_storage: dtype of large mutable state at rest (SNN neuron state,
+        KV caches, delay ring buffers). The paper keeps neuron state in the
+        same fp16 representation; we default state to the same dtype.
+      compute: dtype math runs in (softfp promotion analogue).
+      accum: accumulator dtype for reductions/matmuls.
+      master_fp32: keep an fp32 master copy of trainable params (LM training
+        with fp16 storage requires it; pure simulation does not).
+      loss_scale: static loss scale for fp16 gradients (None = no scaling).
+      stochastic_round: round-to-nearest vs stochastic rounding on downcast.
+    """
+
+    name: str
+    param_storage: Any
+    state_storage: Any
+    compute: Any
+    accum: Any
+    master_fp32: bool = False
+    loss_scale: float | None = None
+    stochastic_round: bool = False
+
+    # -- scalar/array helpers -------------------------------------------------
+    def store(self, x: jax.Array, *, key: jax.Array | None = None) -> jax.Array:
+        """Downcast ``x`` to the storage dtype (params)."""
+        return _downcast(x, self.param_storage, self.stochastic_round, key)
+
+    def store_state(self, x: jax.Array, *, key: jax.Array | None = None) -> jax.Array:
+        return _downcast(x, self.state_storage, self.stochastic_round, key)
+
+    def load(self, x: jax.Array) -> jax.Array:
+        """Upcast stored data to the compute dtype (softfp promotion)."""
+        if x.dtype in (jnp.float16, jnp.bfloat16, jnp.float32, jnp.float64):
+            return x.astype(self.compute)
+        return x  # integer data (spike counts, indices) passes through
+
+    @property
+    def bytes_per_param(self) -> int:
+        return jnp.dtype(self.param_storage).itemsize
+
+
+def _downcast(x: jax.Array, dtype, stochastic: bool, key) -> jax.Array:
+    x = jnp.asarray(x)
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x
+    if jnp.dtype(dtype) == x.dtype:
+        return x
+    if stochastic and key is not None and jnp.dtype(dtype).itemsize < x.dtype.itemsize:
+        return _stochastic_round(x, dtype, key)
+    return x.astype(dtype)
+
+
+_MANTISSA_BITS = {"float16": 10, "bfloat16": 7}
+_MIN_ULP = {"float16": 2.0**-24, "bfloat16": 2.0**-133}  # smallest subnormal
+
+
+def _stochastic_round(x: jax.Array, dtype, key: jax.Array) -> jax.Array:
+    """Unbiased stochastic rounding f32 -> {f16, bf16}.
+
+    Computes the target-dtype ULP at each value (2^(e-1-mantissa_bits) for
+    normals), rounds down to the target grid, then rounds up with probability
+    proportional to the remainder. E[SR(x)] == x for in-range values.
+    """
+    name = jnp.dtype(dtype).name
+    mant = _MANTISSA_BITS[name]
+    x32 = x.astype(jnp.float32)
+    _, e = jnp.frexp(jnp.where(x32 == 0, 1.0, x32))  # |x| = m * 2^e, m in [0.5, 1)
+    ulp = jnp.exp2((e - 1 - mant).astype(jnp.float32))
+    ulp = jnp.maximum(ulp, _MIN_ULP[name])
+    down = jnp.floor(x32 / ulp) * ulp
+    p_up = (x32 - down) / ulp
+    u = jax.random.uniform(key, x32.shape, dtype=jnp.float32)
+    out32 = down + jnp.where(u < p_up, ulp, 0.0)
+    fmax = float(jnp.finfo(dtype).max)
+    out32 = jnp.clip(out32, -fmax, fmax)
+    return out32.astype(dtype)
+
+
+POLICIES: dict[str, PrecisionPolicy] = {
+    # The paper's reference build: IEEE single floats everywhere.
+    "fp32": PrecisionPolicy(
+        name="fp32",
+        param_storage=jnp.float32,
+        state_storage=jnp.float32,
+        compute=jnp.float32,
+        accum=jnp.float32,
+    ),
+    # The paper's contribution: IEEE fp16 storage, f32 compute (softfp).
+    "fp16": PrecisionPolicy(
+        name="fp16",
+        param_storage=jnp.float16,
+        state_storage=jnp.float16,
+        compute=jnp.float32,
+        accum=jnp.float32,
+        master_fp32=True,
+        loss_scale=2.0**12,
+    ),
+    # Beyond-paper: bf16 storage — wider exponent, for LM-scale dynamic range.
+    "bf16": PrecisionPolicy(
+        name="bf16",
+        param_storage=jnp.bfloat16,
+        state_storage=jnp.bfloat16,
+        compute=jnp.float32,
+        accum=jnp.float32,
+        master_fp32=True,
+    ),
+    # Beyond-paper OPTIMIZED: fp16 storage + bf16 activations (f32 accum/
+    # norms/softmax). The §Perf hillclimb policy — halves activation HBM
+    # traffic vs the paper-faithful f32-compute policy.
+    "fp16_opt": PrecisionPolicy(
+        name="fp16_opt",
+        param_storage=jnp.float16,
+        state_storage=jnp.float16,
+        compute=jnp.bfloat16,
+        accum=jnp.float32,
+        master_fp32=True,
+        loss_scale=2.0**12,
+    ),
+    # Beyond-paper: fp16 storage with stochastic rounding on writeback.
+    "fp16_sr": PrecisionPolicy(
+        name="fp16_sr",
+        param_storage=jnp.float16,
+        state_storage=jnp.float16,
+        compute=jnp.float32,
+        accum=jnp.float32,
+        master_fp32=True,
+        loss_scale=2.0**12,
+        stochastic_round=True,
+    ),
+}
+
+
+def get_policy(name: str) -> PrecisionPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError as e:
+        raise KeyError(f"unknown precision policy {name!r}; have {sorted(POLICIES)}") from e
+
+
+# -- pytree helpers -----------------------------------------------------------
+
+def store_tree(tree, policy: PrecisionPolicy, *, key: jax.Array | None = None):
+    """Downcast every floating leaf of ``tree`` to the storage dtype."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if key is not None and policy.stochastic_round:
+        keys = list(jax.random.split(key, len(leaves)))
+    else:
+        keys = [None] * len(leaves)
+    out = [policy.store(leaf, key=k) for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def load_tree(tree, policy: PrecisionPolicy):
+    """Upcast every floating leaf to the compute dtype."""
+    return jax.tree.map(policy.load, tree)
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays or ShapeDtypeStructs."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        shape = getattr(leaf, "shape", ())
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is None:
+            continue
+        n = 1
+        for s in shape:
+            n *= int(s)
+        try:
+            itemsize = jnp.dtype(dtype).itemsize
+        except TypeError:
+            # Extended dtypes (PRNG keys): fall back to the array's own nbytes.
+            nbytes = getattr(leaf, "nbytes", None)
+            total += int(nbytes) if nbytes is not None else 0
+            continue
+        total += n * itemsize
+    return total

@@ -1,0 +1,14 @@
+"""Test hermeticity: reset trace-time module flags between tests."""
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _reset_trace_flags():
+    yield
+    from repro.models.layers import set_act_dtype
+    from repro.models.mamba import set_ssm_chunk
+    from repro.launch import mesh as meshlib
+
+    set_act_dtype(None)
+    set_ssm_chunk(0)
+    meshlib.KV_CACHE_LAYOUT[0] = "headdim"

@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests: reduced config, one train step + decode steps
+on CPU, asserting output shapes and finiteness (assignment deliverable f)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch, reduce_arch
+from repro.models import tasks, transformer as tf
+from repro.precision import get_policy
+
+POLICY = get_policy("fp16")
+
+
+def _batch(cfg, b=2, s=32):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(b, s - (cfg.n_patches if cfg.frontend == "vision" else 0))),
+        jnp.int32)}
+    if cfg.frontend == "vision":
+        p = cfg.n_patches
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(b, p, cfg.d_model)), jnp.bfloat16)
+        # text follows patches; t/h/w positions equal for text, patch grid 2x4
+        pos = np.zeros((b, s, 3), np.int32)
+        for i in range(p):
+            pos[:, i] = (0, i // 4, i % 4)
+        pos[:, p:] = np.arange(1, s - p + 1)[None, :, None] + 1
+        batch["positions"] = jnp.asarray(pos)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+class TestArchSmoke:
+    def test_train_step(self, arch):
+        cfg = reduce_arch(get_arch(arch))
+        state = tasks.init_train_state(cfg, POLICY, seed=0)
+        step = tasks.make_train_step(cfg, POLICY, mesh=None, seq_shard=False,
+                                     ce_chunk=16)
+        batch = _batch(cfg)
+        new_state, metrics = jax.jit(step)(state, batch)
+        loss = float(metrics["loss"])
+        assert np.isfinite(loss) and loss > 0, loss
+        # params updated and still finite
+        leaves = jax.tree.leaves(new_state["params"])
+        assert all(np.all(np.isfinite(np.asarray(l, np.float32)))
+                   for l in leaves)
+        # a second step moves the loss
+        _, m2 = jax.jit(step)(new_state, batch)
+        assert np.isfinite(float(m2["loss"]))
+
+    def test_decode_step(self, arch):
+        cfg = reduce_arch(get_arch(arch))
+        params = tf.init_params(cfg, jax.random.key(1), POLICY)
+        b, cap = 2, 32
+        cache = tf.init_cache(cfg, b, cap, POLICY.state_storage)
+        token = jnp.zeros((b, 1), jnp.int32)
+        step = jax.jit(tasks.make_decode_step(cfg, POLICY))
+        for pos in range(3):
+            logits, cache = step(params, cache, token, jnp.int32(pos))
+            token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        assert logits.shape == (b, cfg.vocab_size)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    def test_prefill_matches_decode(self, arch):
+        # prefill(tokens[0:s]) logits at last position == decoding the same
+        # tokens one by one — validates cache semantics end-to-end.
+        cfg = reduce_arch(get_arch(arch))
+        if cfg.frontend == "vision":
+            pytest.skip("prefix modality handled in serve driver test")
+        if cfg.moe is not None:
+            # capacity dropping is load-dependent, so prefill(T=8) and
+            # decode(T=1) legitimately diverge on dropped tokens; give the
+            # equivalence test drop-free capacity.
+            cfg = dataclasses.replace(
+                cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=float(
+                    cfg.moe.n_experts)))
+        params = tf.init_params(cfg, jax.random.key(2), POLICY)
+        s, b = 8, 1
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        prefill = tasks.make_prefill_step(cfg, POLICY, seq_shard=False)
+        logits_p = jax.jit(prefill)(params, {"tokens": toks})
+
+        cache = tf.init_cache(cfg, b, 16, POLICY.state_storage)
+        step = jax.jit(tasks.make_decode_step(cfg, POLICY))
+        for pos in range(s):
+            logits_d, cache = step(params, cache, toks[:, pos:pos + 1],
+                                   jnp.int32(pos))
+        np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                                   rtol=5e-2, atol=5e-2)

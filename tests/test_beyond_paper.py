@@ -1,0 +1,65 @@
+"""Beyond-paper extensions: int8 synaptic storage, optimized policies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.synfire4 import SYNFIRE4, build_synfire
+from repro.core import Engine
+from repro.core.network import NetState
+from repro.precision import dequantize, get_policy, quantize_int8
+
+
+def _with_int8_weights(net):
+    """Round-trip every projection's weights through int8 storage."""
+    new_w = tuple(
+        dequantize(quantize_int8(w.astype(jnp.float32), axis=0),
+                   jnp.float32)
+        for w in net.state0.weights
+    )
+    net.state0 = NetState(**{**net.state0._asdict(), "weights": new_w})
+    return net
+
+
+class TestInt8Storage:
+    def test_synfire_accuracy_survives_int8(self):
+        """int8 synapse storage (2× below the paper's fp16) keeps ≥97%
+        spike-count accuracy on Synfire4 — the paper's '1k neurons
+        real-time' future work is a storage-precision step away."""
+        ref = build_synfire(SYNFIRE4, policy="fp32")
+        _, out32 = Engine(ref).run(1000)
+        c32 = int(np.asarray(out32["spikes"]).sum())
+
+        net8 = _with_int8_weights(build_synfire(SYNFIRE4, policy="fp32"))
+        _, out8 = Engine(net8).run(1000)
+        c8 = int(np.asarray(out8["spikes"]).sum())
+
+        acc = min(c8, c32) / max(c8, c32)
+        assert acc >= 0.97, (c8, c32)
+
+    def test_int8_quarter_the_bytes(self):
+        w = jnp.ones((200, 200), jnp.float32) * 1.5
+        q = quantize_int8(w, axis=0)
+        assert q.nbytes <= w.nbytes / 4 + 4 * w.shape[1]
+
+
+class TestOptimizedPolicy:
+    def test_fp16_opt_trains(self):
+        from repro.configs import get_arch, reduce_arch
+        from repro.models import tasks
+        from repro.data.synthetic import TokenStream
+        from repro.optim.adamw import AdamWConfig
+
+        cfg = reduce_arch(get_arch("smollm-360m"))
+        policy = get_policy("fp16_opt")  # bf16 activations
+        state = tasks.init_train_state(cfg, policy, seed=0,
+                                       opt_cfg=AdamWConfig(lr=3e-3))
+        step = jax.jit(tasks.make_train_step(
+            cfg, policy, opt_cfg=AdamWConfig(lr=3e-3), ce_chunk=32))
+        stream = TokenStream(vocab_size=cfg.vocab_size, seq_len=64,
+                             global_batch=4, seed=1)
+        losses = []
+        for i in range(15):
+            state, metrics = step(state, stream.batch(i))
+            losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses).all()
+        assert np.mean(losses[-5:]) < np.mean(losses[:5])

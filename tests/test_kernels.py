@@ -1,0 +1,202 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles.
+
+Every Pallas kernel is swept over shapes/dtypes and asserted allclose
+against ``repro.kernels.ref``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.izh_update import izh4_update
+from repro.kernels.stdp_update import stdp_update
+from repro.kernels.syn_matmul import syn_matmul
+
+I = True  # interpret mode (CPU container; kernels target TPU)
+
+
+class TestIzh4Kernel:
+    @pytest.mark.parametrize("n", [5, 128, 1000, 1200, 4096])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16])
+    def test_matches_ref(self, n, dtype):
+        k = jax.random.split(jax.random.key(0), 7)
+        v = (jax.random.uniform(k[0], (n,)) * 40 - 80).astype(dtype)
+        u = (jax.random.uniform(k[1], (n,)) * 10 - 15).astype(dtype)
+        i_syn = jax.random.uniform(k[2], (n,)) * 20
+        a = jnp.full((n,), 0.02)
+        b = jnp.full((n,), 0.2)
+        c = jnp.full((n,), -65.0)
+        d = jnp.full((n,), 8.0)
+        vo, uo, sp = izh4_update(v, u, i_syn, a, b, c, d, interpret=I)
+        vr, ur, sr = ref.izh4_ref(v, u, i_syn, a, b, c, d)
+        np.testing.assert_allclose(np.asarray(vo, np.float32),
+                                   np.asarray(vr, np.float32), rtol=2e-3, atol=2e-2)
+        np.testing.assert_allclose(np.asarray(uo, np.float32),
+                                   np.asarray(ur, np.float32), rtol=2e-3, atol=2e-2)
+        assert np.array_equal(np.asarray(sp), np.asarray(sr))
+
+    @pytest.mark.parametrize("substeps,method_dt", [(1, 1.0), (2, 1.0), (4, 0.5)])
+    def test_substep_sweep(self, substeps, method_dt):
+        n = 300
+        k = jax.random.split(jax.random.key(1), 3)
+        v = jax.random.uniform(k[0], (n,)) * 40 - 80
+        u = jax.random.uniform(k[1], (n,)) * 10 - 15
+        i_syn = jax.random.uniform(k[2], (n,)) * 15
+        a = jnp.full((n,), 0.1); b = jnp.full((n,), 0.2)
+        c = jnp.full((n,), -65.0); d = jnp.full((n,), 2.0)
+        vo, uo, sp = izh4_update(v, u, i_syn, a, b, c, d, dt=method_dt,
+                                 substeps=substeps, interpret=I)
+        vr, ur, sr = ref.izh4_ref(v, u, i_syn, a, b, c, d, dt=method_dt,
+                                  substeps=substeps)
+        np.testing.assert_allclose(np.asarray(vo), np.asarray(vr), rtol=1e-5, atol=1e-4)
+        assert np.array_equal(np.asarray(sp), np.asarray(sr))
+
+
+class TestSynMatmul:
+    @pytest.mark.parametrize("shape", [(1, 200, 200), (8, 256, 512),
+                                       (3, 1000, 50), (128, 384, 384)])
+    @pytest.mark.parametrize("wdtype", [jnp.float16, jnp.bfloat16, jnp.float32])
+    def test_matches_ref(self, shape, wdtype):
+        m, k, n = shape
+        kk = jax.random.split(jax.random.key(2), 2)
+        x = jax.random.normal(kk[0], (m, k), jnp.float32)
+        w = jax.random.normal(kk[1], (k, n), jnp.float32).astype(wdtype)
+        out = syn_matmul(x, w, interpret=I)
+        want = ref.syn_matmul_ref(x, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_spike_propagation_semantics(self):
+        # 0/1 spike vector times fp16 weights == exact sum of fan-in weights.
+        rng = np.random.default_rng(0)
+        spikes = (rng.random((1, 500)) < 0.2).astype(np.float32)
+        w = (rng.random((500, 300)) < 0.3) * rng.normal(1.5, 0.1, (500, 300))
+        w16 = jnp.asarray(w, jnp.float16)
+        out = syn_matmul(jnp.asarray(spikes), w16, interpret=I)
+        want = spikes @ np.asarray(w16, np.float32)
+        np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6, atol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("bhsd", [
+        (1, 4, 128, 64),   # MHA
+        (2, 8, 256, 64),   # GQA 8q over 2kv below
+        (1, 2, 100, 32),   # ragged seq (padding path)
+    ])
+    def test_causal_mha(self, bhsd):
+        b, h, s, d = bhsd
+        k3 = jax.random.split(jax.random.key(3), 3)
+        q = jax.random.normal(k3[0], (b, h, s, d), jnp.float32)
+        k = jax.random.normal(k3[1], (b, h, s, d), jnp.float32)
+        v = jax.random.normal(k3[2], (b, h, s, d), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, interpret=I)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("g", [2, 4])
+    def test_gqa(self, g):
+        b, hkv, s, d = 1, 2, 192, 64
+        k3 = jax.random.split(jax.random.key(4), 3)
+        q = jax.random.normal(k3[0], (b, hkv * g, s, d), jnp.float32)
+        k = jax.random.normal(k3[1], (b, hkv, s, d), jnp.float32)
+        v = jax.random.normal(k3[2], (b, hkv, s, d), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, interpret=I)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_local_window(self):
+        b, h, s, d = 1, 2, 256, 64
+        k3 = jax.random.split(jax.random.key(5), 3)
+        q = jax.random.normal(k3[0], (b, h, s, d), jnp.float32)
+        k = jax.random.normal(k3[1], (b, h, s, d), jnp.float32)
+        v = jax.random.normal(k3[2], (b, h, s, d), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, window=64, interpret=I)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=64)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_decode_alignment(self):
+        # Sq=1 against a long KV (decode): query sits at the KV end.
+        b, h, sk, d = 2, 4, 384, 64
+        k3 = jax.random.split(jax.random.key(6), 3)
+        q = jax.random.normal(k3[0], (b, h, 1, d), jnp.float32)
+        k = jax.random.normal(k3[1], (b, h, sk, d), jnp.float32)
+        v = jax.random.normal(k3[2], (b, h, sk, d), jnp.float32)
+        out = flash_attention(q, k, v, causal=True, interpret=I)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_fp16_kv(self):
+        b, h, s, d = 1, 2, 128, 64
+        k3 = jax.random.split(jax.random.key(7), 3)
+        q = jax.random.normal(k3[0], (b, h, s, d), jnp.float32)
+        k = jax.random.normal(k3[1], (b, h, s, d), jnp.float16)
+        v = jax.random.normal(k3[2], (b, h, s, d), jnp.float16)
+        out = flash_attention(q, k, v, causal=True, interpret=I)
+        want = ref.flash_attention_ref(q, k.astype(jnp.float32),
+                                       v.astype(jnp.float32), causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=5e-3, atol=5e-3)
+
+
+class TestSTDPKernel:
+    @pytest.mark.parametrize("pq", [(50, 60), (200, 200), (1000, 300)])
+    @pytest.mark.parametrize("wdtype", [jnp.float16, jnp.float32])
+    def test_matches_ref(self, pq, wdtype):
+        p, q = pq
+        rng = np.random.default_rng(1)
+        mask = jnp.asarray(rng.random((p, q)) < 0.3)
+        w = jnp.where(mask, 1.0, 0.0).astype(wdtype)
+        pre_t = jnp.asarray(rng.random((p,)), jnp.float32)
+        post_t = jnp.asarray(rng.random((q,)), jnp.float32)
+        pre_s = jnp.asarray(rng.random((p,)) < 0.1)
+        post_s = jnp.asarray(rng.random((q,)) < 0.1)
+        kw = dict(a_plus=0.01, a_minus=0.012, w_min=0.0, w_max=5.0)
+        out = stdp_update(w, mask, pre_t, post_t, pre_s, post_s, interpret=I, **kw)
+        want = ref.stdp_update_ref(w, mask, pre_t, post_t, pre_s, post_s, **kw)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestFlashAttentionStress:
+    @pytest.mark.parametrize("case", [
+        # (b, hkv, g, sq, sk, d, window, kvdtype) — combined stress
+        (2, 2, 4, 96, 320, 64, 128, jnp.float16),   # GQA+window+fp16+ragged
+        (1, 1, 8, 64, 64, 32, -1, jnp.bfloat16),    # MQA g=8, bf16 kv
+        (1, 4, 1, 1, 500, 128, 200, jnp.float16),   # decode + ring window
+    ])
+    def test_combined(self, case):
+        b, hkv, g, sq, sk, d, window, kvd = case
+        ks = jax.random.split(jax.random.key(11), 3)
+        q = jax.random.normal(ks[0], (b, hkv * g, sq, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, hkv, sk, d), jnp.float32).astype(kvd)
+        v = jax.random.normal(ks[2], (b, hkv, sk, d), jnp.float32).astype(kvd)
+        out = flash_attention(q, k, v, causal=True, window=window, interpret=I)
+        want = ref.flash_attention_ref(q, k.astype(jnp.float32),
+                                       v.astype(jnp.float32),
+                                       causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=6e-3, atol=6e-3)
+
+    def test_xla_chunked_path_matches_kernel(self):
+        """The model's XLA chunked attention == the Pallas kernel (same
+        online-softmax algorithm, two implementations)."""
+        from repro.models.attention import chunked_attention
+        b, h, s, d = 1, 4, 256, 64
+        ks = jax.random.split(jax.random.key(12), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, h, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, h, d), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        xla = chunked_attention(q, k, v, pos, jnp.arange(s), causal=True,
+                                block_k=64)
+        pall = flash_attention(jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1),
+                               jnp.moveaxis(v, 2, 1), causal=True, interpret=I)
+        np.testing.assert_allclose(np.asarray(jnp.moveaxis(xla, 2, 1)),
+                                   np.asarray(pall), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,96 @@
+"""Property-based tests (hypothesis) for the precision/memory substrates —
+the paper's core mechanism must hold for arbitrary inputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.memory import MemoryBudgetError, MemoryLedger
+from repro.precision import (
+    dequantize, get_policy, quantize_int8, store_tree, tree_bytes,
+)
+
+floats = st.floats(min_value=-60000.0, max_value=60000.0,
+                   allow_nan=False, allow_infinity=False, width=32)
+
+
+class TestFp16Storage:
+    @given(st.lists(floats, min_size=1, max_size=64))
+    @settings(max_examples=50, deadline=None)
+    def test_fp16_roundtrip_error_bounded(self, xs):
+        """|fp16(x) - x| <= 2^-11 · |x| + tiny — the paper's 'no loss of
+        function' regime for synfire weights (|w| in [1, 3.5])."""
+        x = jnp.asarray(xs, jnp.float32)
+        y = get_policy("fp16").store(x).astype(jnp.float32)
+        err = np.abs(np.asarray(y - x))
+        bound = np.abs(np.asarray(x)) * 2.0**-11 + 2.0**-24 + 1e-12
+        assert np.all(err <= bound)
+
+    @given(st.lists(floats, min_size=1, max_size=64))
+    @settings(max_examples=50, deadline=None)
+    def test_storage_halves_bytes(self, xs):
+        x = jnp.asarray(xs, jnp.float32)
+        assert tree_bytes(get_policy("fp16").store(x)) * 2 == tree_bytes(x)
+
+    @given(st.floats(min_value=-1000.0, max_value=1000.0, allow_nan=False,
+                     allow_infinity=False, width=32))
+    @settings(max_examples=30, deadline=None)
+    def test_stochastic_rounding_unbiased(self, v):
+        x = jnp.full((4096,), v, jnp.float32)
+        y = get_policy("fp16_sr").store(x, key=jax.random.key(0))
+        mean = float(jnp.mean(y.astype(jnp.float32)))
+        # SR error of the mean shrinks ~ ulp/sqrt(n); allow 4 sigma-ish.
+        ulp = max(abs(v), 2**-14) * 2.0**-10
+        assert abs(mean - v) <= 4 * ulp / np.sqrt(4096) + 1e-7
+
+    @given(st.lists(floats, min_size=2, max_size=128))
+    @settings(max_examples=50, deadline=None)
+    def test_int8_quant_error_bound(self, xs):
+        x = jnp.asarray(xs, jnp.float32)[None, :]
+        q = quantize_int8(x)
+        back = dequantize(q)
+        amax = float(jnp.max(jnp.abs(x)))
+        err = float(jnp.max(jnp.abs(back - x)))
+        assert err <= amax / 127.0 * 0.5 + 1e-9  # half-step of the grid
+
+    def test_policy_load_passthrough_ints(self):
+        p = get_policy("fp16")
+        idx = jnp.arange(10, dtype=jnp.int32)
+        assert p.load(idx).dtype == jnp.int32
+
+
+class TestLedger:
+    @given(st.lists(st.integers(min_value=1, max_value=2**20),
+                    min_size=1, max_size=10))
+    @settings(max_examples=50, deadline=None)
+    def test_total_is_sum(self, sizes):
+        led = MemoryLedger()
+        for i, s in enumerate(sizes):
+            led.register(f"a{i}", jax.ShapeDtypeStruct((s,), jnp.int8))
+        assert led.total_used == sum(sizes)
+
+    def test_budget_enforced(self):
+        led = MemoryLedger(budget=100)
+        led.register("x", jax.ShapeDtypeStruct((50,), jnp.int8))
+        try:
+            led.register("y", jax.ShapeDtypeStruct((51,), jnp.int8))
+            raise AssertionError("budget not enforced")
+        except MemoryBudgetError:
+            pass
+
+    def test_release(self):
+        led = MemoryLedger()
+        led.register("x", jax.ShapeDtypeStruct((100,), jnp.int8))
+        assert led.release("x") == 100
+        assert led.total_used == 0
+
+    @given(st.integers(min_value=1, max_value=1 << 16))
+    @settings(max_examples=30, deadline=None)
+    def test_rampup_rows_monotone(self, n):
+        led = MemoryLedger(budget=1 << 20)
+        for stage in ("1. CARLsim Init.", "4. Syn. State", "7. Auxiliary Data"):
+            with led.stage(stage):
+                led.register(stage, jax.ShapeDtypeStruct((n,), jnp.int8))
+        rows = led.rampup_rows()
+        used = [r["total_used_mb"] for r in rows]
+        assert used == sorted(used)

@@ -1,0 +1,133 @@
+"""Engine throughput benchmark — the packed/kernel-backed tick vs the seed
+per-projection loop, across batch sizes.
+
+Measures wall-clock ticks/sec (and neuron-updates/sec) for Synfire4
+(1,200 neurons) and Synfire4-mini (186 neurons) under the fp16 policy:
+
+  * ``propagation="loop"``   — the seed per-projection reference path
+  * ``propagation="packed"`` — fused bucket matmuls + hoisted fp16→f32
+    decode + event gating + per-delay ring commit, at B ∈ {1, 8, 64}
+    via ``Engine.run_batch``
+
+Each (config, path, batch) cell is timed ``reps`` times interleaved (the
+container shares cores with other processes; we report the best rep, the
+standard practice for throughput kernels) after a compile+warmup run.
+
+Writes ``BENCH_engine.json`` at the repo root so subsequent PRs can track
+the trajectory, and returns CSV-contract rows for ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.configs.synfire4 import SYNFIRE4, SYNFIRE4_MINI, build_synfire  # noqa: E402
+from repro.core import Engine  # noqa: E402
+
+_REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+BATCHES = (1, 8, 64)
+
+
+def _time_run(fn, n_ticks: int, reps: int) -> float:
+    """Best wall-clock seconds over ``reps`` timed runs (after warmup)."""
+    # Warm with the SAME n_ticks: n_steps is a jit static argname, so a
+    # shorter warmup would compile a different cache entry and the first
+    # timed rep would pay full trace+compile.
+    jax.block_until_ready(fn(n_ticks))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(n_ticks))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_engine(n_ticks: int = 1000, reps: int = 3) -> tuple[list[dict], dict]:
+    results: list[dict] = []
+    cells = []  # (cfg_label, net, runner-factory) pairs, timed interleaved
+
+    for cfg in (SYNFIRE4, SYNFIRE4_MINI):
+        net_loop = build_synfire(cfg, policy="fp16", propagation="loop")
+        net_pack = build_synfire(cfg, policy="fp16", propagation="packed")
+        e_loop, e_pack = Engine(net_loop), Engine(net_pack)
+        n = net_loop.n_neurons
+
+        def loop_fn(e=e_loop):
+            return lambda k: e.run(k)[1]["spikes"]
+
+        cells.append((cfg.name, "loop", 1, n, loop_fn()))
+        for b in BATCHES:
+            def pack_fn(e=e_pack, b=b):
+                return lambda k: e.run_batch(k, b)[1]["spikes"]
+
+            cells.append((cfg.name, "packed", b, n, pack_fn()))
+
+    for name, path, batch, n, fn in cells:
+        wall = _time_run(fn, n_ticks, reps)
+        us_per_tick = wall / n_ticks * 1e6
+        results.append({
+            "net": name,
+            "n_neurons": n,
+            "propagation": path,
+            "backend": "xla",
+            "batch": batch,
+            "ticks": n_ticks,
+            "wall_s": round(wall, 4),
+            "us_per_tick": round(us_per_tick, 2),
+            "us_per_tick_per_trial": round(us_per_tick / batch, 2),
+            "ticks_per_sec": round(n_ticks / wall, 1),
+            "trial_ticks_per_sec": round(n_ticks * batch / wall, 1),
+            "neuron_updates_per_sec": round(n_ticks * batch * n / wall, 1),
+        })
+
+    def cell(net, path, batch):
+        return next(r for r in results
+                    if (r["net"], r["propagation"], r["batch"]) == (net, path, batch))
+
+    speedup = {}
+    for cfg in (SYNFIRE4, SYNFIRE4_MINI):
+        base = cell(cfg.name, "loop", 1)["us_per_tick"]
+        speedup[cfg.name] = {
+            f"packed_b{b}_vs_loop":
+                round(base / cell(cfg.name, "packed", b)["us_per_tick_per_trial"], 2)
+            for b in BATCHES
+        }
+
+    payload = {
+        "device": str(jax.devices()[0]),
+        "n_ticks": n_ticks,
+        "reps": reps,
+        "results": results,
+        "speedup_vs_seed_loop": speedup,
+    }
+    out_path = os.path.join(_REPO_ROOT, "BENCH_engine.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    derived = {
+        "synfire4_packed_b1_speedup":
+            speedup[SYNFIRE4.name]["packed_b1_vs_loop"],
+        "synfire4_packed_b64_speedup":
+            speedup[SYNFIRE4.name]["packed_b64_vs_loop"],
+        "synfire4_b64_neuron_updates_per_sec":
+            cell(SYNFIRE4.name, "packed", 64)["neuron_updates_per_sec"],
+    }
+    return results, derived
+
+
+def main() -> None:
+    rows, derived = bench_engine()
+    print(json.dumps(derived, indent=1))
+    for r in rows:
+        print(" ", r)
+
+
+if __name__ == "__main__":
+    main()

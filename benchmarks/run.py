@@ -25,6 +25,8 @@ def _run(name, fn):
 
 
 def main() -> None:
+    from benchmarks.bench_engine import bench_engine
+
     results = {}
     for name, fn in [
         ("table3_memory_rampup", paper_tables.table3_memory_rampup),
@@ -32,6 +34,7 @@ def main() -> None:
         ("accuracy_fp16_vs_fp32", paper_tables.accuracy_fp16_vs_fp32),
         ("memory_fp16_halving", paper_tables.memory_fp16_halving),
         ("table5_performance", paper_tables.table5_performance),
+        ("bench_engine", bench_engine),  # writes BENCH_engine.json
     ]:
         results[name] = _run(name, fn)
 

@@ -74,11 +74,17 @@ def build_synfire(
     budget: int | None = MCU_BUDGET_BYTES,
     monitor_ms_hint: int = 1000,
     method: str = "euler",
+    backend: str = "xla",
+    propagation: str = "packed",
+    pallas_interpret: bool | None = None,
 ) -> CompiledNetwork:
     """Build the Synfire benchmark under a precision policy.
 
     ``policy='fp16'`` is the paper's MCU configuration; ``policy='fp32'`` is
-    its single-precision reference.
+    its single-precision reference. ``backend``/``propagation`` select the
+    engine execution strategy (see ``repro.core.backend``): the default is
+    the packed fused-matmul path on plain XLA; ``backend='pallas'`` routes
+    the tick through the Pallas kernels (interpret mode off-TPU).
     """
     net = NetworkBuilder(seed=seed)
     net.add_spike_generator(
@@ -110,4 +116,6 @@ def build_synfire(
 
     ledger = MemoryLedger(budget=budget, name=f"{cfg.name}/{policy}")
     return net.compile(policy=policy, ledger=ledger,
-                       monitor_ms_hint=monitor_ms_hint, method=method)
+                       monitor_ms_hint=monitor_ms_hint, method=method,
+                       backend=backend, propagation=propagation,
+                       pallas_interpret=pallas_interpret)

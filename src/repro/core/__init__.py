@@ -1,6 +1,7 @@
 """SNN simulation core — the paper's contribution (CARLsim on JAX/TPU)."""
-from repro.core.engine import Engine, StepOutput, run, step
+from repro.core.engine import Engine, StepOutput, run, run_batch, step
 from repro.core.network import (
+    BucketSpec,
     CompiledNetwork,
     NetParams,
     NetState,
@@ -21,8 +22,9 @@ from repro.core.plasticity import STDPConfig
 from repro.core.synapses import STPConfig
 
 __all__ = [
-    "Engine", "StepOutput", "run", "step",
-    "CompiledNetwork", "NetParams", "NetState", "NetStatic", "NetworkBuilder",
+    "Engine", "StepOutput", "run", "run_batch", "step",
+    "BucketSpec", "CompiledNetwork", "NetParams", "NetState", "NetStatic",
+    "NetworkBuilder",
     "NeuronModel", "NeuronParams", "NeuronState",
     "generator", "izh4", "izh9", "lif", "update_neurons",
     "STDPConfig", "STPConfig",

@@ -1,0 +1,251 @@
+"""Backend dispatch: kernel-backed fused tick vs. pure-XLA reference path.
+
+The engine's hot path is selected by two ``NetStatic`` fields:
+
+``propagation``
+    * ``"packed"`` (default) — non-plastic projections are packed per the
+      compile-time bucket plan (:class:`~repro.core.network.BucketSpec`):
+      one block-dense ``[P, Q]`` matmul per (delay, receptor) bucket
+      (density-adaptive: sparse unions split into per-projection blocks),
+      with the fp16 → f32 weight decode hoisted out of the tick scan
+      (assembled **once per run()**), matmuls event-gated on the source
+      actually spiking, and one ring commit per DISTINCT delay instead of
+      per-projection ``dynamic_slice``/``dynamic_update_slice`` writes.
+      Plastic / STP projections keep per-projection matmuls (their weights
+      mutate every tick) but feed the same per-delay ring commit.
+    * ``"loop"`` — the seed per-projection reference path, kept verbatim
+      for benchmarking and as a semantic oracle.
+
+``backend``
+    * ``"xla"`` (default) — plain jnp ops everywhere.
+    * ``"pallas"`` — neuron integration through the fused
+      :func:`repro.kernels.izh_update.izh4_update` VPU kernel, propagation
+      matmuls through :func:`repro.kernels.syn_matmul.syn_matmul` (fp16
+      decode fused into the MXU feed), and pair-based STDP through
+      :func:`repro.kernels.stdp_update.stdp_update`. With
+      ``static.pallas_interpret`` (auto-set off-TPU) the same code path
+      runs under the Pallas interpreter so CPU tests exercise it.
+
+Bit-parity: both backends consume the *same* assembled f32 bucket images
+and express the same f32 arithmetic; the pallas matmul is issued with a
+single k-block (≤ ``_MAX_KBLOCK``) so its accumulation order matches
+``jnp.dot`` at bucket sizes up to a few hundred — on CPU the two backends
+produce bit-identical spike rasters, asserted by ``tests/test_backends.py``
+on Synfire4-mini in both storage policies.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import neurons as nrn
+from repro.core.plasticity import STDPState, _trace_step, stdp_step
+from repro.core.synapses import stp_update
+from repro.kernels.izh_update import izh4_update
+from repro.kernels.stdp_update import stdp_update as stdp_kernel
+from repro.kernels.syn_matmul import syn_matmul
+
+__all__ = [
+    "assemble_packed",
+    "update_neurons_dispatch",
+    "propagate_packed",
+    "stdp_dispatch",
+]
+
+# Largest single k-block handed to the pallas matmul. Below this the kernel
+# reduces the whole contraction in one jnp.dot — same accumulation order as
+# the xla path (bit-parity); beyond it the kernel falls back to k-blocking.
+_MAX_KBLOCK = 4096
+
+
+def assemble_packed(static, weights) -> tuple[jax.Array, ...]:
+    """Assemble the per-bucket block-dense weight images, decoded to f32.
+
+    ``weights`` is the per-projection tuple from ``NetState``; only
+    non-plastic projections appear in ``static.buckets`` so the images are
+    loop-invariant — callers (``engine.run``) build them once per device
+    program, outside the tick scan.
+    """
+    packed = []
+    for b in static.buckets:
+        if len(b.members) == 1 and (b.p, b.q) == (
+            static.projections[b.members[0][0]].pre_size,
+            static.projections[b.members[0][0]].post_size,
+        ):
+            # Singleton bucket covering exactly one projection block: the
+            # decode IS the image (no zero-fill copy).
+            packed.append(weights[b.members[0][0]].astype(jnp.float32))
+            continue
+        img = jnp.zeros((b.p, b.q), jnp.float32)
+        for j, r0, c0 in b.members:
+            spec = static.projections[j]
+            img = img.at[r0:r0 + spec.pre_size, c0:c0 + spec.post_size].add(
+                weights[j].astype(jnp.float32)
+            )
+        packed.append(img)
+    return tuple(packed)
+
+
+def _matmul(static, pre_row: jax.Array, w: jax.Array) -> jax.Array:
+    """``pre_row [P] @ w [P, Q] -> [Q]`` via the selected backend."""
+    if static.backend == "pallas":
+        out = syn_matmul(
+            pre_row[None, :], w,
+            block_k=_MAX_KBLOCK,
+            interpret=static.pallas_interpret,
+        )
+        return out[0]
+    return jnp.dot(pre_row, w.astype(jnp.float32))
+
+
+def update_neurons_dispatch(static, params, neurons, i_syn):
+    """Neuron integration step.
+
+    IZH4-only euler networks (``static.izh4_only`` — the Synfire workloads)
+    take a dedicated path: the pallas backend runs the fused VPU kernel,
+    the xla backend an IZH4-specialized jnp update that skips the generic
+    three-model ``_derivs`` selects (~2.5× fewer elementwise ops per tick,
+    bit-identical values — the dead IZH9/LIF branches never influence the
+    selected lanes). Everything else falls back to the generic reference.
+    """
+    state_dtype = neurons.v.dtype
+    fast = static.izh4_only and static.method == "euler"
+    if not fast:
+        return nrn.update_neurons(
+            params.neuron, neurons, i_syn,
+            dt=static.dt, substeps=static.substeps, method=static.method,
+            state_dtype=state_dtype,
+        )
+
+    p = params.neuron
+    if static.backend == "pallas":
+        v, u, spiked = izh4_update(
+            neurons.v, neurons.u, i_syn.astype(jnp.float32),
+            p.a, p.b, p.c, p.d,
+            dt=static.dt, substeps=static.substeps,
+            interpret=static.pallas_interpret,
+        )
+        v = v.astype(jnp.float32)
+        u = u.astype(jnp.float32)
+    else:
+        v = neurons.v.astype(jnp.float32)
+        u = neurons.u.astype(jnp.float32)
+        i = i_syn.astype(jnp.float32)
+        h = static.dt / static.substeps
+        for _ in range(static.substeps):
+            dv = 0.04 * v * v + 5.0 * v + 140.0 - u + i
+            du = p.a * (p.b * v - u)
+            v = v + h * dv
+            u = u + h * du
+        spiked = v >= 30.0
+        v = jnp.where(spiked, p.c, v)
+        u = jnp.where(spiked, u + p.d, u)
+    # Generator / refractory handling identical to update_neurons so all
+    # paths agree bitwise (generators hold rest, refrac counts down).
+    is_gen = p.model == nrn.NeuronModel.GENERATOR
+    in_refrac = neurons.refrac > 0
+    spiked = spiked & ~is_gen & ~in_refrac
+    v = jnp.where(is_gen, p.c, v).astype(state_dtype)
+    u = jnp.where(is_gen, 0.0, u).astype(state_dtype)
+    refrac = jnp.maximum(neurons.refrac - 1, 0).astype(jnp.int16)
+    return nrn.NeuronState(v=v, u=u, refrac=refrac), spiked
+
+
+def propagate_packed(static, params, state, spikes, ring, t, packed):
+    """Fused propagation: bucket matmuls + per-projection fallbacks for
+    plastic/STP projections, merged into one ring commit per distinct delay.
+
+    Returns ``(ring', new_stp)`` with ``new_stp`` aligned to
+    ``static.projections``.
+    """
+    f32 = jnp.float32
+    spikes_f32 = spikes.astype(f32)
+    coba = static.ring_channels == 2
+
+    # Dense [N, C] f32 accumulator per distinct delay; contributions land in
+    # it via static-slice adds (placement known at compile time), then one
+    # full-row update per delay commits them to the ring — replacing the
+    # seed's per-projection dynamic_slice/dynamic_update_slice pairs.
+    acc: dict[int, jax.Array] = {}
+
+    def emit(make_contrib, pred, delay_ms, channel, post_start, post_ids):
+        """Accumulate one contribution; with event gating the matmul only
+        runs when the source actually spiked this tick (a silent source
+        contributes exact ±0, so skipping is bitwise neutral — the
+        CARLsim insight that silent neurons must cost nothing)."""
+        a = acc.get(delay_ms)
+        if a is None:
+            a = jnp.zeros((static.n, static.ring_channels), f32)
+
+        def add(a):
+            contrib = make_contrib()
+            contrib = jnp.abs(contrib) if coba else contrib
+            if post_start >= 0:  # contiguous post span -> static slice add
+                q = contrib.shape[0]
+                return a.at[post_start:post_start + q, channel].add(contrib)
+            return a.at[post_ids, channel].add(contrib)
+
+        if static.event_gated:
+            acc[delay_ms] = jax.lax.cond(pred, add, lambda a: a, a)
+        else:
+            acc[delay_ms] = add(a)
+
+    # 1. packed buckets (non-plastic projections): one matmul per bucket
+    for bi, b in enumerate(static.buckets):
+        if b.pre_start >= 0:  # contiguous pre union -> static slice
+            pre = spikes_f32[b.pre_start:b.pre_start + b.p]
+        else:
+            pre = spikes_f32[params.bucket_pre_ids[bi]]
+        emit(lambda pre=pre, bi=bi: _matmul(static, pre, packed[bi]),
+             pre.any() if static.event_gated else None,
+             b.delay_ms, b.channel, b.post_start, params.bucket_post_ids[bi])
+
+    # 2. per-projection fallback: plastic / STP projections (weights change
+    #    every tick, so they cannot live in the hoisted packed image)
+    new_stp = []
+    for spec, w, stp_state in zip(static.projections, state.weights, state.stp):
+        if not (spec.plastic or spec.stp is not None):
+            new_stp.append(None)
+            continue
+        pre_sp = spikes_f32[spec.pre_slice]
+        if stp_state is not None and spec.stp is not None:
+            pre_sp = pre_sp * (stp_state.u * stp_state.x)
+        channel = 0 if (not coba or spec.receptor == "exc") else 1
+        emit(lambda pre_sp=pre_sp, w=w: _matmul(static, pre_sp, w.astype(f32)),
+             spikes[spec.pre_slice].any() if static.event_gated else None,
+             spec.delay_ms, channel, spec.post_start, None)
+        if stp_state is not None:
+            new_stp.append(stp_update(spec.stp, stp_state,
+                                      spikes[spec.pre_slice], static.dt))
+        else:
+            new_stp.append(None)
+
+    # 3. commit the per-delay accumulators to the ring: one full-row
+    # read-add-write per DISTINCT delay (K ≈ 2 for Synfire) instead of the
+    # seed's per-PROJECTION dynamic-slice patches. Full-row dynamic updates
+    # with an unbatched slot index stay cheap slice ops both at B=1 and
+    # under vmap (a single lax.scatter would serialize on CPU and
+    # re-batch poorly).
+    for d in sorted(acc):
+        slot = jnp.mod(t + d, static.ring_len)
+        row = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
+        row = row + acc[d].astype(ring.dtype)
+        ring = jax.lax.dynamic_update_index_in_dim(ring, row, slot, axis=0)
+    return ring, tuple(new_stp)
+
+
+def stdp_dispatch(static, cfg, tr, w, mask, pre_sp, post_sp):
+    """Pair-based STDP step; pallas fuses the two rank-1 updates + clip +
+    mask into one pass over the fp16 weight matrix."""
+    if static.backend != "pallas" or cfg.tau_elig is not None:
+        return stdp_step(cfg, tr, w, mask, pre_sp, post_sp, static.dt)
+    pre_t = _trace_step(tr.pre_trace, pre_sp, cfg.tau_plus, static.dt)
+    post_t = _trace_step(tr.post_trace, post_sp, cfg.tau_minus, static.dt)
+    w2 = stdp_kernel(
+        w, mask, pre_t, post_t,
+        pre_sp.astype(jnp.float32), post_sp.astype(jnp.float32),
+        a_plus=cfg.a_plus, a_minus=cfg.a_minus,
+        w_min=cfg.w_min, w_max=cfg.w_max,
+        interpret=static.pallas_interpret,
+    )
+    return STDPState(pre_trace=pre_t, post_trace=post_t), w2

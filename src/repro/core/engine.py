@@ -12,6 +12,19 @@ tick follows CARLsim's kernel:
   5. propagate spikes through every projection into slot (t + delay) mod D,
      scaling by STP where enabled  — fp16 weights, f32 matmul
   6. STDP / DA-STDP trace + weight updates
+
+Execution strategy is selected by ``NetStatic`` (see ``repro.core.backend``):
+``propagation="packed"`` (default) fuses all non-plastic projections into
+one block-dense matmul per distinct (delay, receptor) bucket and one
+scatter-add into the ring, with the fp16 → f32 weight decode hoisted out of
+the tick scan; ``backend="pallas"`` additionally routes neuron integration,
+the propagation matmuls, and pair-based STDP through the Pallas TPU kernels
+(interpret mode on CPU). ``propagation="loop"`` is the seed per-projection
+reference path, kept for benchmarking (``benchmarks/bench_engine.py``).
+
+Throughput batching: :func:`run_batch` vmaps the scan over B independent
+trials (per-trial RNG streams, shared weights) in one device program — the
+packed weight images are decoded once and amortized across the batch.
 """
 from __future__ import annotations
 
@@ -22,13 +35,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as be
 from repro.core import neurons as nrn
 from repro.core.conductance import coba_current, decay_and_deliver
 from repro.core.network import CompiledNetwork, NetParams, NetState, NetStatic
-from repro.core.plasticity import da_stdp_step, stdp_step
+from repro.core.plasticity import da_stdp_step
 from repro.core.synapses import propagate, stp_update
 
-__all__ = ["StepOutput", "step", "run", "Engine"]
+__all__ = ["StepOutput", "step", "run", "run_batch", "Engine"]
 
 
 class StepOutput(NamedTuple):
@@ -43,11 +57,30 @@ def step(
     state: NetState,
     i_ext: jax.Array | None = None,
     dopamine: jax.Array | None = None,
+    *,
+    packed: tuple[jax.Array, ...] | None = None,
+    gen_u: jax.Array | None = None,
 ) -> tuple[NetState, StepOutput]:
-    """One 1 ms tick. Pure; jit/scan-friendly."""
+    """One 1 ms tick. Pure; jit/scan-friendly.
+
+    ``packed`` is the tuple of assembled f32 bucket weight images from
+    :func:`repro.core.backend.assemble_packed`; ``run`` builds it once per
+    device program so the scan body treats it as a loop constant. When
+    calling ``step`` directly it may be omitted (assembled on the fly).
+
+    ``gen_u`` is this tick's pre-drawn uniforms for the generator spans
+    (``[static.n_gen]``, from ``run``'s batched draw outside the scan).
+    When ``None`` the step draws per tick from ``state.key`` over the full
+    [N] vector — the seed behavior, kept for the "loop" path and direct
+    ``step`` calls. The two modes consume different RNG streams, so their
+    rasters differ realization-wise (not statistically).
+    """
     f32 = jnp.float32
     t = state.t
-    key, k_gen = jax.random.split(state.key)
+    if gen_u is None:
+        key, k_gen = jax.random.split(state.key)
+    else:
+        key = state.key  # run() pre-split; the carry key passes through
     slot = jnp.mod(t, static.ring_len)
 
     # 1–2: delivery
@@ -65,23 +98,81 @@ def step(
     if i_ext is not None:
         i_syn = i_syn + i_ext.astype(f32)
 
-    # 3: neuron dynamics
-    new_neurons, spiked = nrn.update_neurons(
-        params.neuron, state.neurons, i_syn,
-        dt=static.dt, substeps=static.substeps, method=static.method,
-        state_dtype=state.neurons.v.dtype,
+    # 3: neuron dynamics (xla reference or fused pallas IZH4 kernel)
+    new_neurons, spiked = be.update_neurons_dispatch(
+        static, params, state.neurons, i_syn
     )
 
     # 4: Poisson generators (rate in Hz -> p per tick); two-phase schedule:
     # pulse rate during [0, until_ms), sustained rate after.
-    in_pulse = (t.astype(f32) * static.dt) < params.gen_until
-    rate = jnp.where(in_pulse, params.gen_rate, params.gen_rate_after)
-    p_fire = rate * (static.dt / 1000.0)
-    gen_spikes = jax.random.uniform(k_gen, (static.n,), dtype=f32) < p_fire
-    is_gen = params.neuron.model == nrn.NeuronModel.GENERATOR
-    spikes = jnp.where(is_gen, gen_spikes, spiked)
+    t_ms = t.astype(f32) * static.dt
+    if gen_u is None:
+        # Seed behavior: one uniform per neuron per tick from the carry key.
+        in_pulse = t_ms < params.gen_until
+        rate = jnp.where(in_pulse, params.gen_rate, params.gen_rate_after)
+        p_fire = rate * (static.dt / 1000.0)
+        gen_spikes = jax.random.uniform(k_gen, (static.n,), dtype=f32) < p_fire
+        is_gen = params.neuron.model == nrn.NeuronModel.GENERATOR
+        spikes = jnp.where(is_gen, gen_spikes, spiked)
+    else:
+        # Packed path: uniforms pre-drawn outside the scan, only for the
+        # generator spans (generators are the sole per-tick RNG consumers).
+        spikes = spiked
+        off = 0
+        for g0, sz in static.gen_spans:
+            seg = slice(g0, g0 + sz)
+            in_pulse = t_ms < params.gen_until[seg]
+            rate = jnp.where(in_pulse, params.gen_rate[seg],
+                             params.gen_rate_after[seg])
+            gsp = gen_u[off:off + sz] < rate * (static.dt / 1000.0)
+            spikes = spikes.at[g0:g0 + sz].set(gsp)
+            off += sz
 
     # 5: propagation into future ring slots
+    if static.propagation == "packed":
+        if packed is None:
+            packed = be.assemble_packed(static, state.weights)
+        ring, new_stp = be.propagate_packed(
+            static, params, state, spikes, ring, t, packed
+        )
+        new_stp = list(new_stp)
+    else:
+        ring, new_stp = _propagate_loop(static, state, spikes, ring, t)
+
+    # 6: plasticity
+    new_weights, new_stdp = [], []
+    da = dopamine if dopamine is not None else jnp.float32(0.0)
+    for spec, cfg, w, tr, mask in zip(
+        static.projections, static.stdp, state.weights, state.stdp, params.masks
+    ):
+        if cfg is None:
+            new_weights.append(w)
+            new_stdp.append(None)
+            continue
+        pre_sp = spikes[spec.pre_slice]
+        post_sp = spikes[spec.post_slice]
+        if cfg.tau_elig is not None:
+            tr2, w2 = da_stdp_step(cfg, tr, w, mask, pre_sp, post_sp, da, static.dt)
+        else:
+            tr2, w2 = be.stdp_dispatch(static, cfg, tr, w, mask, pre_sp, post_sp)
+        new_weights.append(w2)
+        new_stdp.append(tr2)
+
+    new_state = NetState(
+        t=t + 1, key=key, neurons=new_neurons, ring=ring,
+        weights=tuple(new_weights), stp=tuple(new_stp), stdp=tuple(new_stdp),
+        cond=cond,
+    )
+    out = StepOutput(
+        spikes=spikes, v=new_neurons.v.astype(f32), i_syn=i_syn
+    )
+    return new_state, out
+
+
+def _propagate_loop(static, state, spikes, ring, t):
+    """Seed reference path: Python loop over projections with per-projection
+    ``dynamic_slice``/``dynamic_update_slice`` ring writes. Kept verbatim as
+    the semantic oracle and the benchmark baseline for the packed path."""
     new_stp = []
     for spec, w, stp_state in zip(static.projections, state.weights, state.stp):
         contrib = propagate(spec, _proj(w), spikes, stp_state)  # [post] f32 signed
@@ -101,35 +192,7 @@ def step(
             new_stp.append(stp_update(spec.stp, stp_state, pre_sp, static.dt))
         else:
             new_stp.append(None)
-
-    # 6: plasticity
-    new_weights, new_stdp = [], []
-    da = dopamine if dopamine is not None else jnp.float32(0.0)
-    for spec, cfg, w, tr, mask in zip(
-        static.projections, static.stdp, state.weights, state.stdp, params.masks
-    ):
-        if cfg is None:
-            new_weights.append(w)
-            new_stdp.append(None)
-            continue
-        pre_sp = spikes[spec.pre_slice]
-        post_sp = spikes[spec.post_slice]
-        if cfg.tau_elig is not None:
-            tr2, w2 = da_stdp_step(cfg, tr, w, mask, pre_sp, post_sp, da, static.dt)
-        else:
-            tr2, w2 = stdp_step(cfg, tr, w, mask, pre_sp, post_sp, static.dt)
-        new_weights.append(w2)
-        new_stdp.append(tr2)
-
-    new_state = NetState(
-        t=t + 1, key=key, neurons=new_neurons, ring=ring,
-        weights=tuple(new_weights), stp=tuple(new_stp), stdp=tuple(new_stdp),
-        cond=cond,
-    )
-    out = StepOutput(
-        spikes=spikes, v=new_neurons.v.astype(f32), i_syn=i_syn
-    )
-    return new_state, out
+    return ring, new_stp
 
 
 def _proj(w: jax.Array):
@@ -138,8 +201,7 @@ def _proj(w: jax.Array):
     return ProjectionParams(weight=w, mask=None)
 
 
-@partial(jax.jit, static_argnames=("static", "n_steps", "record_v", "record_i"))
-def run(
+def _run_impl(
     static: NetStatic,
     params: NetParams,
     state: NetState,
@@ -150,12 +212,6 @@ def run(
     record_v: bool = False,
     record_i: bool = False,
 ):
-    """Scan ``step`` for ``n_steps`` ticks; returns (state, outputs).
-
-    outputs.spikes: [T, N] bool raster (the paper's correctness metric is
-    total spike count over 1 s of model time).
-    """
-
     ie_xs = i_ext if i_ext is not None else jnp.zeros((n_steps, 0), jnp.float32)
     da_xs = (
         dopamine.reshape(n_steps, 1)
@@ -163,15 +219,38 @@ def run(
         else jnp.zeros((n_steps, 0), jnp.float32)
     )
 
+    # Hoist the packed weight-image assembly (+ fp16 -> f32 decode) out of
+    # the tick scan: non-plastic weights are loop-invariant, so the scan
+    # body closes over the decoded images as constants.
+    packed = (
+        be.assemble_packed(static, state.weights)
+        if static.propagation == "packed"
+        else None
+    )
+
+    # Packed path: pre-draw all generator uniforms in one vectorized call
+    # outside the scan (threefry on [T, n_gen] at once instead of a small
+    # per-tick draw over the full [N]) and feed them as scan inputs.
+    if static.propagation == "packed" and static.n_gen > 0:
+        k_draw, k_carry = jax.random.split(state.key)
+        gu_xs = jax.random.uniform(k_draw, (n_steps, static.n_gen),
+                                   dtype=jnp.float32)
+        state = state._replace(key=k_carry)
+    else:
+        gu_xs = jnp.zeros((n_steps, 0), jnp.float32)
+
     def body_wrap(carry, xs):
-        ie, da = xs
+        ie, da, gu = xs
         ie = ie if ie.shape[-1] else None  # static shape: decided at trace time
         da = da[0] if da.shape[-1] else None
-        new_state, out = step(static, params, carry, ie, da)
+        gu = gu if gu.shape[-1] else None
+        new_state, out = step(static, params, carry, ie, da, packed=packed,
+                              gen_u=gu)
         ys = (out.spikes, out.v if record_v else None, out.i_syn if record_i else None)
         return new_state, ys
 
-    final, ys = jax.lax.scan(body_wrap, state, (ie_xs, da_xs), length=n_steps)
+    final, ys = jax.lax.scan(body_wrap, state, (ie_xs, da_xs, gu_xs),
+                             length=n_steps)
     spikes, v, i = ys
     outputs = {"spikes": spikes}
     if record_v:
@@ -179,6 +258,71 @@ def run(
     if record_i:
         outputs["i_syn"] = i
     return final, outputs
+
+
+@partial(jax.jit, static_argnames=("static", "n_steps", "record_v", "record_i"))
+def run(
+    static: NetStatic,
+    params: NetParams,
+    state: NetState,
+    n_steps: int,
+    *,
+    i_ext: jax.Array | None = None,
+    dopamine: jax.Array | None = None,
+    record_v: bool = False,
+    record_i: bool = False,
+):
+    """Scan ``step`` for ``n_steps`` ticks; returns (state, outputs).
+
+    outputs.spikes: [T, N] bool raster (the paper's correctness metric is
+    total spike count over 1 s of model time).
+    """
+    return _run_impl(static, params, state, n_steps, i_ext=i_ext,
+                     dopamine=dopamine, record_v=record_v, record_i=record_i)
+
+
+@partial(jax.jit, static_argnames=("static", "n_steps", "batch", "record_v",
+                                   "record_i"))
+def run_batch(
+    static: NetStatic,
+    params: NetParams,
+    state: NetState,
+    n_steps: int,
+    batch: int,
+    *,
+    record_v: bool = False,
+    record_i: bool = False,
+):
+    """Simulate ``batch`` independent trials in ONE device program.
+
+    Each trial forks its own RNG stream from ``state.key`` (so generator
+    spike schedules differ per trial — B independent stimulus draws); all
+    other initial state and the weights are shared and broadcast by vmap.
+    The packed weight images are decoded once and amortized across the
+    batch — this is the throughput-serving configuration, benchmarked by
+    ``benchmarks/bench_engine.py`` at B ∈ {1, 8, 64}.
+
+    Returns ``(final_states, outputs)`` with a leading ``[batch]`` axis on
+    every leaf (``outputs["spikes"]``: [B, T, N]).
+    """
+    keys = jax.random.split(state.key, batch)
+    if batch == 1:
+        # No vmap for a single trial — keep event gating and the lean
+        # non-batched program, just add the leading axis.
+        res = _run_impl(static, params, state._replace(key=keys[0]), n_steps,
+                        record_v=record_v, record_i=record_i)
+        return jax.tree.map(lambda x: x[None], res)
+
+    # Event gating uses lax.cond on a per-trial predicate; under vmap that
+    # lowers to "compute both branches + select", so turn it off — the
+    # batched matmuls amortize the weight traffic anyway.
+    static_b = dataclasses.replace(static, event_gated=False)
+
+    def one_trial(key):
+        return _run_impl(static_b, params, state._replace(key=key), n_steps,
+                         record_v=record_v, record_i=record_i)
+
+    return jax.vmap(one_trial)(keys)
 
 
 @dataclasses.dataclass
@@ -190,6 +334,13 @@ class Engine:
     def run(self, n_steps: int, state: NetState | None = None, **kw):
         state = state if state is not None else self.net.state0
         return run(self.net.static, self.net.params, state, n_steps, **kw)
+
+    def run_batch(self, n_steps: int, batch: int,
+                  state: NetState | None = None, **kw):
+        """B independent trials in one device program; see :func:`run_batch`."""
+        state = state if state is not None else self.net.state0
+        return run_batch(self.net.static, self.net.params, state, n_steps,
+                         batch, **kw)
 
     def spike_counts(self, n_steps: int, **kw) -> jax.Array:
         _, out = self.run(n_steps, **kw)

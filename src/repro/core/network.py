@@ -46,7 +46,8 @@ from repro.core.synapses import (
 from repro.memory import MemoryLedger
 from repro.precision import PrecisionPolicy, get_policy
 
-__all__ = ["NetworkBuilder", "CompiledNetwork", "NetStatic", "NetParams", "NetState"]
+__all__ = ["NetworkBuilder", "CompiledNetwork", "NetStatic", "NetParams",
+           "NetState", "BucketSpec"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +59,28 @@ class GroupSpec:
     rate_hz: float = 0.0  # rate during [0, until_ms) — the stimulus pulse
     until_ms: float = math.inf
     rate_after_hz: float = 0.0  # sustained rate after the pulse
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """One packed-propagation bucket, lowered to a single block-dense
+    ``[P, Q]`` matmul over the sorted union of its members' pre/post index
+    ranges. ``members`` places each projection's weight block at
+    ``(row, col)`` inside the bucket image. Buckets are formed per
+    (delay, ring-channel) pair when the member blocks fill the union
+    rectangle densely enough to amortize the fused matmul; sparse groups
+    are split into per-projection buckets (zero wasted cells) that still
+    share the hoisted f32 decode and the single ring scatter-add.
+    ``pre_start >= 0`` marks a contiguous pre union starting there (the
+    spike gather lowers to a static slice)."""
+
+    delay_ms: int
+    channel: int  # ring channel: 0 = exc/signed, 1 = inh magnitude (COBA)
+    p: int
+    q: int
+    pre_start: int  # -1 => gather via params.bucket_pre_ids
+    post_start: int  # -1 => scatter via params.bucket_post_ids
+    members: tuple[tuple[int, int, int], ...]  # (proj_idx, row0, col0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +98,24 @@ class NetStatic:
     projections: tuple[ProjectionSpec, ...]
     stdp: tuple[STDPConfig | None, ...]  # aligned with projections
     coba: COBAConfig | None = None
+    # -- execution strategy (see repro.core.backend) --------------------------
+    backend: str = "xla"  # "xla" | "pallas"
+    propagation: str = "packed"  # "packed" | "loop" (seed per-projection path)
+    pallas_interpret: bool = True  # interpret-mode kernels (CPU containers)
+    izh4_only: bool = False  # network is IZH4 + generators only (kernel-able)
+    event_gated: bool = True  # skip a bucket's matmul when its pres are silent
+    buckets: tuple[BucketSpec, ...] = ()
+
+    @property
+    def gen_spans(self) -> tuple[tuple[int, int], ...]:
+        """(start, size) of every generator group — the only neurons that
+        consume per-tick RNG (the packed path draws uniforms just for
+        these spans)."""
+        return tuple((g.start, g.size) for g in self.groups if g.is_generator)
+
+    @property
+    def n_gen(self) -> int:
+        return sum(size for _, size in self.gen_spans)
 
     def group(self, name: str) -> GroupSpec:
         for g in self.groups:
@@ -93,6 +134,11 @@ class NetParams(NamedTuple):
     gen_rate: jax.Array  # [N] Hz during the pulse (0 for non-generators)
     gen_until: jax.Array  # [N] ms pulse end
     gen_rate_after: jax.Array  # [N] Hz sustained after the pulse
+    # Packed-propagation gather/scatter indices, aligned with static.buckets:
+    # pre_ids[b] [P_b] selects the bucket's presynaptic spikes, post_ids[b]
+    # [Q_b] are the ring columns its fused matmul scatters into.
+    bucket_pre_ids: tuple[jax.Array, ...] = ()
+    bucket_post_ids: tuple[jax.Array, ...] = ()
 
 
 class NetState(NamedTuple):
@@ -184,7 +230,17 @@ class NetworkBuilder:
         conductances: COBAConfig | None = None,
         ledger: MemoryLedger | None = None,
         monitor_ms_hint: int = 0,
+        backend: str = "xla",
+        propagation: str = "packed",
+        pallas_interpret: bool | None = None,
+        pack_density: float = 0.5,
     ) -> "CompiledNetwork":
+        if backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if propagation not in ("packed", "loop"):
+            raise ValueError(f"unknown propagation {propagation!r}")
+        if pallas_interpret is None:
+            pallas_interpret = jax.default_backend() != "tpu"
         if isinstance(policy, str):
             policy = get_policy(policy)
         ledger = ledger if ledger is not None else MemoryLedger()
@@ -284,11 +340,23 @@ class NetworkBuilder:
                     jax.ShapeDtypeStruct((monitor_ms_hint, n), jnp.bool_),
                 )
 
+        buckets, pre_ids, post_ids = _plan_buckets(
+            tuple(specs), channels, pack_density
+        )
+        model_codes = np.asarray(neuron_params.model)
+        izh4_only = bool(np.all(
+            (model_codes == int(nrn.NeuronModel.GENERATOR))
+            | (model_codes == int(nrn.NeuronModel.IZH4))
+        ))
+
         static = NetStatic(
             n=n, ring_len=ring_len, ring_channels=channels, dt=dt,
             substeps=substeps, method=method, policy_name=policy.name,
             groups=groups, projections=tuple(specs), stdp=tuple(stdp_cfgs),
             coba=conductances,
+            backend=backend, propagation=propagation,
+            pallas_interpret=pallas_interpret, izh4_only=izh4_only,
+            buckets=buckets,
         )
         params = NetParams(
             neuron=neuron_params,
@@ -296,6 +364,8 @@ class NetworkBuilder:
             gen_rate=gen_rate,
             gen_until=gen_until,
             gen_rate_after=gen_rate_after,
+            bucket_pre_ids=pre_ids,
+            bucket_post_ids=post_ids,
         )
         state0 = NetState(
             t=jnp.int32(0), key=key, neurons=nstate, ring=ring,
@@ -304,6 +374,94 @@ class NetworkBuilder:
         )
         return CompiledNetwork(static=static, params=params, state0=state0,
                                ledger=ledger, policy=policy)
+
+
+def _plan_buckets(
+    specs: tuple[ProjectionSpec, ...], channels: int, pack_density: float
+) -> tuple[tuple[BucketSpec, ...], tuple[jax.Array, ...], tuple[jax.Array, ...]]:
+    """Compile-time packing plan for non-plastic, non-STP projections.
+
+    Projections are grouped by (delay, ring-channel); each group lowers to
+    ONE block-dense matmul over the sorted union of its pre/post index
+    ranges — a member's rows/cols are a *contiguous* span inside the union
+    (ranges stay contiguous under sorted-union), so assembly is a
+    static-slice add. A fused union rectangle stores zeros wherever member
+    blocks don't cover it, so groups whose blocks fill less than
+    ``pack_density`` of the rectangle are split into per-projection buckets
+    (no wasted cells); either way every bucket shares the hoisted fp16→f32
+    decode and the single ring scatter-add, so the per-tick cost is pure
+    matmul + one scatter. Plastic/STP projections are excluded — their
+    weights change every tick, so the engine keeps per-projection matmuls
+    for them (they too feed the fused scatter).
+    """
+    grouped: dict[tuple[int, int], list[int]] = {}
+    for j, s in enumerate(specs):
+        if s.plastic or s.stp is not None:
+            continue
+        channel = 0 if (channels == 1 or s.receptor == "exc") else 1
+        grouped.setdefault((s.delay_ms, channel), []).append(j)
+
+    buckets: list[BucketSpec] = []
+    pre_ids: list[jax.Array] = []
+    post_ids: list[jax.Array] = []
+
+    def unions(members: list[int]) -> tuple[np.ndarray, np.ndarray]:
+        pres = np.unique(np.concatenate([
+            np.arange(specs[j].pre_start,
+                      specs[j].pre_start + specs[j].pre_size)
+            for j in members
+        ]))
+        posts = np.unique(np.concatenate([
+            np.arange(specs[j].post_start,
+                      specs[j].post_start + specs[j].post_size)
+            for j in members
+        ]))
+        return pres, posts
+
+    def emit(delay_ms: int, channel: int, members: list[int]) -> None:
+        pres, posts = unions(members)
+        placed = tuple(
+            (j,
+             int(np.searchsorted(pres, specs[j].pre_start)),
+             int(np.searchsorted(posts, specs[j].post_start)))
+            for j in members
+        )
+        p, q = int(pres.size), int(posts.size)
+        pre_contig = int(pres[-1]) - int(pres[0]) + 1 == p
+        post_contig = int(posts[-1]) - int(posts[0]) + 1 == q
+        buckets.append(BucketSpec(
+            delay_ms=delay_ms, channel=channel, p=p, q=q,
+            pre_start=int(pres[0]) if pre_contig else -1,
+            post_start=int(posts[0]) if post_contig else -1,
+            members=placed,
+        ))
+        pre_ids.append(jnp.asarray(pres, jnp.int32))
+        post_ids.append(jnp.asarray(posts, jnp.int32))
+
+    def fill(members: list[int]) -> float:
+        pres, posts = unions(members)
+        cells = sum(specs[j].pre_size * specs[j].post_size for j in members)
+        return cells / float(pres.size * posts.size)
+
+    for (delay_ms, channel), members in grouped.items():
+        if len(members) > 1 and fill(members) >= pack_density:
+            emit(delay_ms, channel, members)  # whole group fuses densely
+            continue
+        # Second chance: merge projections sharing the same pre range (their
+        # post unions are typically adjacent groups -> near-100% fill), then
+        # emit the rest per-projection.
+        by_pre: dict[tuple[int, int], list[int]] = {}
+        for j in members:
+            by_pre.setdefault(
+                (specs[j].pre_start, specs[j].pre_size), []
+            ).append(j)
+        for sub in by_pre.values():
+            if len(sub) > 1 and fill(sub) >= pack_density:
+                emit(delay_ms, channel, sub)
+            else:
+                for j in sub:
+                    emit(delay_ms, channel, [j])
+    return tuple(buckets), tuple(pre_ids), tuple(post_ids)
 
 
 @dataclasses.dataclass

@@ -32,8 +32,13 @@ def _izh4_kernel(v_ref, u_ref, i_ref, a_ref, b_ref, c_ref, d_ref,
     d = d_ref[...]
     h = dt / substeps
     for _ in range(substeps):  # static unroll — substeps is compile-time
-        v = v + h * (0.04 * v * v + 5.0 * v + 140.0 - u + i_syn)
-        u = u + h * a * (b * v - u)
+        # Simultaneous (dv, du) from the same (v, u) — identical expression
+        # tree to neurons._derivs so the pallas backend is bit-exact with
+        # the xla reference path.
+        dv = 0.04 * v * v + 5.0 * v + 140.0 - u + i_syn
+        du = a * (b * v - u)
+        v = v + h * dv
+        u = u + h * du
     spiked = v >= 30.0
     v = jnp.where(spiked, c, v)
     u = jnp.where(spiked, u + d, u)

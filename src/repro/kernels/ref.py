@@ -13,8 +13,13 @@ def izh4_ref(v, u, i_syn, a, b, c, d, *, dt: float = 1.0, substeps: int = 2):
     i_syn = i_syn.astype(jnp.float32)
     h = dt / substeps
     for _ in range(substeps):
-        v = v + h * (0.04 * v * v + 5.0 * v + 140.0 - u + i_syn)
-        u = u + h * a * (b * v - u)
+        # Simultaneous derivatives (CARLsim evaluates dv and du from the
+        # same pre-step state) — keeps the kernel bit-exact with the
+        # engine's neurons._derivs euler path.
+        dv = 0.04 * v * v + 5.0 * v + 140.0 - u + i_syn
+        du = a * (b * v - u)
+        v = v + h * dv
+        u = u + h * du
     spiked = v >= 30.0
     v = jnp.where(spiked, c, v)
     u = jnp.where(spiked, u + d, u)

@@ -22,7 +22,9 @@ def _stdp_kernel(w_ref, mask_ref, pre_t_ref, post_t_ref, pre_s_ref,
     post_t = post_t_ref[...].astype(jnp.float32)  # [1, bq]
     pre_s = pre_s_ref[...].astype(jnp.float32)  # [bp, 1]
     post_s = post_s_ref[...].astype(jnp.float32)  # [1, bq]
-    w = w + a_plus * pre_t * post_s - a_minus * pre_s * post_t
+    # a⁺·(pre_t ⊗ post_s) − a⁻·(pre_s ⊗ post_t); association matches the
+    # jnp oracle (scalar × outer product) so results are bit-identical.
+    w = w + a_plus * (pre_t * post_s) - a_minus * (pre_s * post_t)
     w = jnp.clip(w, w_min, w_max)
     w = jnp.where(mask_ref[...], w, 0.0)
     o_ref[...] = w.astype(o_ref.dtype)

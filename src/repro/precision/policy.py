@@ -201,9 +201,13 @@ def tree_bytes(tree) -> int:
         try:
             itemsize = jnp.dtype(dtype).itemsize
         except TypeError:
-            # Extended dtypes (PRNG keys): fall back to the array's own nbytes.
-            nbytes = getattr(leaf, "nbytes", None)
-            total += int(nbytes) if nbytes is not None else 0
+            # Extended dtypes (PRNG keys): fall back to the array's own nbytes
+            # (which itself raises on extended dtypes in some jax versions).
+            try:
+                nbytes = int(leaf.nbytes)
+            except Exception:
+                nbytes = 0
+            total += nbytes
             continue
         total += n * itemsize
     return total

@@ -34,6 +34,7 @@ def _batch(cfg, b=2, s=32):
 
 @pytest.mark.parametrize("arch", ARCH_NAMES)
 class TestArchSmoke:
+    @pytest.mark.slow
     def test_train_step(self, arch):
         cfg = reduce_arch(get_arch(arch))
         state = tasks.init_train_state(cfg, POLICY, seed=0)

@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.synfire4 import SYNFIRE4, build_synfire
 from repro.core import Engine
@@ -21,6 +22,7 @@ def _with_int8_weights(net):
 
 
 class TestInt8Storage:
+    @pytest.mark.slow
     def test_synfire_accuracy_survives_int8(self):
         """int8 synapse storage (2× below the paper's fp16) keeps ≥97%
         spike-count accuracy on Synfire4 — the paper's '1k neurons
@@ -43,6 +45,7 @@ class TestInt8Storage:
 
 
 class TestOptimizedPolicy:
+    @pytest.mark.slow
     def test_fp16_opt_trains(self):
         from repro.configs import get_arch, reduce_arch
         from repro.models import tasks

@@ -47,6 +47,7 @@ class TestShardedSNN:
         """)
         assert res["ok"], res
 
+    @pytest.mark.slow
     def test_dp_tp_lm_matches_single_device(self):
         """jit+GSPMD training step on a 2x2 mesh == single-device step."""
         res = run_with_devices(4, """
@@ -100,8 +101,12 @@ class TestShardedSNN:
         def reduce_with(method):
             def f(x):
                 return psum_compressed(x, "pod", method)
-            return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                                         out_specs=P("pod")))
+            try:
+                from jax import shard_map
+            except ImportError:
+                from jax.experimental.shard_map import shard_map
+            return jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"),
+                                     out_specs=P("pod")))
 
         x = jax.random.normal(jax.random.key(0), (4, 64), jnp.float32)
         exact = np.asarray(reduce_with(None)(x))
@@ -138,6 +143,7 @@ class TestShardedSNN:
 
 
 class TestElasticTraining:
+    @pytest.mark.slow
     def test_elastic_train_8_to_4_devices(self):
         """End-to-end elasticity: train sharded on a 4x2 mesh, checkpoint,
         lose half the devices, re-shard onto 2x2, keep training — loss

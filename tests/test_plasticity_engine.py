@@ -20,9 +20,12 @@ class TestSTPInNetwork:
         c = build(STPConfig(u0=0.45, tau_f=50.0, tau_d=750.0))
         _, out = run(c.static, c.params, c.state0, 600, record_i=True)
         i = np.asarray(out["i_syn"])[:, 50:]  # currents at targets
-        early = i[20:120].mean()
+        # Early window starts right after onset (x ≈ 1, full resource) so it
+        # captures the pre-depression drive; by t≈500 ms the resource has
+        # reached its depressed steady state.
+        early = i[5:105].mean()
         late = i[480:580].mean()
-        assert late < 0.75 * early, (early, late)
+        assert late < 0.5 * early, (early, late)
 
         # without STP the drive is stationary
         c0 = build(None)

@@ -3,7 +3,13 @@ the paper's core mechanism must hold for arbitrary inputs."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.memory import MemoryBudgetError, MemoryLedger
 from repro.precision import (

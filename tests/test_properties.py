@@ -4,7 +4,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)",
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_arch, reduce_arch
 from repro.core import NetworkBuilder, izh4, run

@@ -6,6 +6,7 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint.ckpt import latest_step, restore, save, save_every
 from repro.configs import get_arch, reduce_arch
@@ -62,6 +63,7 @@ class TestTrainStep:
         assert np.isfinite(losses).all()
         assert np.mean(losses[-5:]) < np.mean(losses[:5])
 
+    @pytest.mark.slow
     def test_microbatch_matches_full_batch(self):
         opt = AdamWConfig(lr=1e-3)
         s0 = tasks.init_train_state(CFG, POLICY, seed=0, opt_cfg=opt)

@@ -1,20 +1,29 @@
-"""Engine throughput benchmark — the packed/kernel-backed tick vs the seed
-per-projection loop, across batch sizes.
+"""Engine throughput benchmark — propagation strategies across batch sizes.
 
-Measures wall-clock ticks/sec (and neuron-updates/sec) for Synfire4
-(1,200 neurons) and Synfire4-mini (186 neurons) under the fp16 policy:
+Measures wall-clock ticks/sec (and neuron-updates/sec) under the fp16
+policy for Synfire4 (1,200 neurons), Synfire4-mini (186 neurons), and the
+scaled-up Synfire4×10 (12,000 neurons at the paper's per-neuron fan-in —
+the fanin ≪ n_pre regime):
 
   * ``propagation="loop"``   — the seed per-projection reference path
-  * ``propagation="packed"`` — fused bucket matmuls + hoisted fp16→f32
-    decode + event gating + per-delay ring commit, at B ∈ {1, 8, 64}
-    via ``Engine.run_batch``
+  * ``propagation="packed"`` — fused dense bucket matmuls + hoisted
+    fp16→f32 decode + event gating + per-delay ring commit, at
+    B ∈ {1, 8, 64} via ``Engine.run_batch``
+  * ``propagation="sparse"`` — CSR fan-in gather + segment-sum; weights
+    stored ``[post, fanin]`` so ledger-reported synapse bytes (also
+    recorded here) scale with fan-in, not the dense rectangle
 
 Each (config, path, batch) cell is timed ``reps`` times interleaved (the
 container shares cores with other processes; we report the best rep, the
-standard practice for throughput kernels) after a compile+warmup run.
+standard practice for throughput kernels) after a compile+warmup run, and
+the harness asserts seed determinism: the same engine must reproduce the
+warmup raster bit-for-bit on the final timed rep.
 
-Writes ``BENCH_engine.json`` at the repo root so subsequent PRs can track
-the trajectory, and returns CSV-contract rows for ``benchmarks/run.py``.
+Writes ``BENCH_engine.json`` at the repo root, **merging** into an
+existing file (cells are keyed by (net, propagation, backend, batch);
+entries not re-measured in this invocation are preserved) so subsequent
+PRs can track the trajectory. Returns CSV-contract rows for
+``benchmarks/run.py``.
 """
 from __future__ import annotations
 
@@ -26,8 +35,14 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
+import numpy as np  # noqa: E402
 
-from repro.configs.synfire4 import SYNFIRE4, SYNFIRE4_MINI, build_synfire  # noqa: E402
+from repro.configs.synfire4 import (  # noqa: E402
+    SYNFIRE4,
+    SYNFIRE4_MINI,
+    SYNFIRE4_X10,
+    build_synfire,
+)
 from repro.core import Engine  # noqa: E402
 
 _REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
@@ -35,56 +50,125 @@ _REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 BATCHES = (1, 8, 64)
 
 
-def _time_run(fn, n_ticks: int, reps: int) -> float:
-    """Best wall-clock seconds over ``reps`` timed runs (after warmup)."""
-    # Warm with the SAME n_ticks: n_steps is a jit static argname, so a
-    # shorter warmup would compile a different cache entry and the first
-    # timed rep would pay full trace+compile.
-    jax.block_until_ready(fn(n_ticks))
-    best = float("inf")
+def _time_cells(cells, reps: int) -> list[float]:
+    """Best wall-clock seconds per cell over ``reps`` interleaved passes.
+
+    Rep r of every cell runs before rep r+1 of any cell, so each cell's
+    best rep is drawn from the same set of quiet windows — a load spike on
+    the shared container degrades one pass of everything rather than all
+    reps of whichever cell it happened to land on.
+
+    Also asserts seed determinism per cell: each engine closes over a
+    fixed initial state, so the final timed rep must reproduce the warmup
+    raster exactly — a silent RNG or accumulation-order regression fails
+    the bench itself.
+    """
+    # Warm each cell with its OWN tick count: n_steps is a jit static
+    # argname, so a shorter warmup would compile a different cache entry
+    # and the first timed rep would pay full trace+compile.
+    want = [np.asarray(jax.block_until_ready(fn(ticks)))
+            for _, _, _, _, ticks, fn in cells]
+    walls = [float("inf")] * len(cells)
+    last = list(want)
     for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(n_ticks))
-        best = min(best, time.perf_counter() - t0)
-    return best
+        for ci, (_, _, _, _, ticks, fn) in enumerate(cells):
+            t0 = time.perf_counter()
+            last[ci] = jax.block_until_ready(fn(ticks))
+            walls[ci] = min(walls[ci], time.perf_counter() - t0)
+    for ci, (name, path, batch, _, _, _) in enumerate(cells):
+        assert np.array_equal(want[ci], np.asarray(last[ci])), (
+            f"bench harness: same-seed rerun of ({name}, {path}, b{batch}) "
+            "produced a different raster"
+        )
+    return walls
 
 
-def bench_engine(n_ticks: int = 1000, reps: int = 3) -> tuple[list[dict], dict]:
+def _merge_payload(out_path: str, payload: dict) -> dict:
+    """Merge this invocation's payload into an existing BENCH_engine.json.
+
+    Result rows are keyed by (net, propagation, backend, batch); cells not
+    re-measured here keep their previous values, as do per-net speedup /
+    ledger entries and any top-level keys this version doesn't write —
+    a partial sweep no longer clobbers unrelated history. Top-level
+    ``device``/``n_ticks``/``reps`` describe the *latest* invocation only;
+    each row carries its own ``ticks``/``reps`` so preserved cells stay
+    attributed to the protocol they were measured under.
+    """
+    if not os.path.exists(out_path):
+        return payload
+    try:
+        with open(out_path) as f:
+            old = json.load(f)
+    except (OSError, ValueError):
+        return payload
+
+    def key(r):
+        return (r["net"], r["propagation"], r["backend"], r["batch"])
+
+    merged = {key(r): r for r in old.get("results", []) if "net" in r}
+    for r in payload["results"]:
+        merged[key(r)] = r
+    payload["results"] = list(merged.values())
+    for field in ("speedup_vs_seed_loop", "ledger_synapse_bytes"):
+        base = old.get(field, {})
+        for net, d in payload.get(field, {}).items():
+            base.setdefault(net, {}).update(d)
+        payload[field] = base
+    for k, v in old.items():
+        payload.setdefault(k, v)
+    return payload
+
+
+def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
+                 write_json: bool = True) -> tuple[list[dict], dict]:
     results: list[dict] = []
-    cells = []  # (cfg_label, net, runner-factory) pairs, timed interleaved
+    cells = []  # (cfg_label, path, batch, n, ticks, runner) — timed interleaved
+    ledger_bytes: dict[str, dict[str, int]] = {}
+
+    def build(cfg, prop, **kw):
+        net = build_synfire(cfg, policy="fp16", propagation=prop, **kw)
+        ledger_bytes.setdefault(cfg.name, {})[prop] = net.ledger.synapse_bytes()
+        return net
 
     for cfg in (SYNFIRE4, SYNFIRE4_MINI):
-        net_loop = build_synfire(cfg, policy="fp16", propagation="loop")
-        net_pack = build_synfire(cfg, policy="fp16", propagation="packed")
-        e_loop, e_pack = Engine(net_loop), Engine(net_pack)
-        n = net_loop.n_neurons
+        e_loop = Engine(build(cfg, "loop"))
+        e_pack = Engine(build(cfg, "packed"))
+        e_sparse = Engine(build(cfg, "sparse"))
+        n = e_loop.net.n_neurons
 
-        def loop_fn(e=e_loop):
-            return lambda k: e.run(k)[1]["spikes"]
-
-        cells.append((cfg.name, "loop", 1, n, loop_fn()))
+        cells.append((cfg.name, "loop", 1, n, n_ticks,
+                      lambda k, e=e_loop: e.run(k)[1]["spikes"]))
+        cells.append((cfg.name, "sparse", 1, n, n_ticks,
+                      lambda k, e=e_sparse: e.run(k)[1]["spikes"]))
         for b in BATCHES:
-            def pack_fn(e=e_pack, b=b):
-                return lambda k: e.run_batch(k, b)[1]["spikes"]
+            cells.append((cfg.name, "packed", b, n, n_ticks,
+                          lambda k, e=e_pack, b=b: e.run_batch(k, b)[1]["spikes"]))
 
-            cells.append((cfg.name, "packed", b, n, pack_fn()))
+    # Synfire4×10: the dense rectangles (~80 MB of weights+masks) are 10×
+    # the MCU budget, so build unbudgeted; the CSR build is what fits.
+    x10_kw = dict(budget=None, monitor_ms_hint=0)
+    for prop in ("packed", "sparse"):
+        e = Engine(build(SYNFIRE4_X10, prop, **x10_kw))
+        cells.append((SYNFIRE4_X10.name, prop, 1, e.net.n_neurons, x10_ticks,
+                      lambda k, e=e: e.run(k)[1]["spikes"]))
 
-    for name, path, batch, n, fn in cells:
-        wall = _time_run(fn, n_ticks, reps)
-        us_per_tick = wall / n_ticks * 1e6
+    walls = _time_cells(cells, reps)
+    for (name, path, batch, n, ticks, fn), wall in zip(cells, walls):
+        us_per_tick = wall / ticks * 1e6
         results.append({
             "net": name,
             "n_neurons": n,
             "propagation": path,
             "backend": "xla",
             "batch": batch,
-            "ticks": n_ticks,
+            "ticks": ticks,
+            "reps": reps,
             "wall_s": round(wall, 4),
             "us_per_tick": round(us_per_tick, 2),
             "us_per_tick_per_trial": round(us_per_tick / batch, 2),
-            "ticks_per_sec": round(n_ticks / wall, 1),
-            "trial_ticks_per_sec": round(n_ticks * batch / wall, 1),
-            "neuron_updates_per_sec": round(n_ticks * batch * n / wall, 1),
+            "ticks_per_sec": round(ticks / wall, 1),
+            "trial_ticks_per_sec": round(ticks * batch / wall, 1),
+            "neuron_updates_per_sec": round(ticks * batch * n / wall, 1),
         })
 
     def cell(net, path, batch):
@@ -99,18 +183,28 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3) -> tuple[list[dict], dict]:
                 round(base / cell(cfg.name, "packed", b)["us_per_tick_per_trial"], 2)
             for b in BATCHES
         }
-
-    payload = {
-        "device": str(jax.devices()[0]),
-        "n_ticks": n_ticks,
-        "reps": reps,
-        "results": results,
-        "speedup_vs_seed_loop": speedup,
+        speedup[cfg.name]["sparse_b1_vs_loop"] = round(
+            base / cell(cfg.name, "sparse", 1)["us_per_tick"], 2)
+    speedup[SYNFIRE4_X10.name] = {
+        "sparse_vs_packed": round(
+            cell(SYNFIRE4_X10.name, "packed", 1)["us_per_tick"]
+            / cell(SYNFIRE4_X10.name, "sparse", 1)["us_per_tick"], 2),
     }
-    out_path = os.path.join(_REPO_ROOT, "BENCH_engine.json")
-    with open(out_path, "w") as f:
-        json.dump(payload, f, indent=1)
 
+    if write_json:
+        out_path = os.path.join(_REPO_ROOT, "BENCH_engine.json")
+        payload = _merge_payload(out_path, {
+            "device": str(jax.devices()[0]),
+            "n_ticks": n_ticks,
+            "reps": reps,
+            "results": results,
+            "speedup_vs_seed_loop": speedup,
+            "ledger_synapse_bytes": ledger_bytes,
+        })
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=1)
+
+    x10 = SYNFIRE4_X10.name
     derived = {
         "synfire4_packed_b1_speedup":
             speedup[SYNFIRE4.name]["packed_b1_vs_loop"],
@@ -118,6 +212,12 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3) -> tuple[list[dict], dict]:
             speedup[SYNFIRE4.name]["packed_b64_vs_loop"],
         "synfire4_b64_neuron_updates_per_sec":
             cell(SYNFIRE4.name, "packed", 64)["neuron_updates_per_sec"],
+        "synfire4_x10_sparse_vs_packed_speedup":
+            speedup[x10]["sparse_vs_packed"],
+        "synfire4_x10_packed_synapse_mb":
+            round(ledger_bytes[x10]["packed"] / 1024**2, 2),
+        "synfire4_x10_sparse_synapse_mb":
+            round(ledger_bytes[x10]["sparse"] / 1024**2, 2),
     }
     return results, derived
 

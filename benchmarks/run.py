@@ -3,9 +3,15 @@
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract), then a
 human-readable dump of each table. Roofline rows are appended when dry-run
 artifacts exist under results/dryrun.
+
+``--smoke`` shrinks the engine sweep (fewer ticks, one rep) so CI can run
+the full driver end-to-end in a couple of minutes — it exercises every
+code path (all propagation modes, the ×10 sparse build, the JSON merge)
+without producing publication-grade timings.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -24,8 +30,21 @@ def _run(name, fn):
     return rows, derived
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     from benchmarks.bench_engine import bench_engine
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick CI pass: tiny tick counts, one rep")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        def engine_fn():
+            # don't merge throwaway smoke timings into BENCH_engine.json
+            return bench_engine(n_ticks=60, reps=1, x10_ticks=30,
+                                write_json=False)
+    else:
+        engine_fn = bench_engine
 
     results = {}
     for name, fn in [
@@ -34,7 +53,7 @@ def main() -> None:
         ("accuracy_fp16_vs_fp32", paper_tables.accuracy_fp16_vs_fp32),
         ("memory_fp16_halving", paper_tables.memory_fp16_halving),
         ("table5_performance", paper_tables.table5_performance),
-        ("bench_engine", bench_engine),  # writes BENCH_engine.json
+        ("bench_engine", engine_fn),  # writes/merges BENCH_engine.json
     ]:
         results[name] = _run(name, fn)
 

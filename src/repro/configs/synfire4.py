@@ -21,7 +21,8 @@ from repro.core.network import CompiledNetwork, NetworkBuilder
 from repro.core.neurons import izh4
 from repro.memory import MCU_BUDGET_BYTES, MemoryLedger
 
-__all__ = ["SynfireConfig", "SYNFIRE4", "SYNFIRE4_MINI", "build_synfire"]
+__all__ = ["SynfireConfig", "SYNFIRE4", "SYNFIRE4_MINI", "SYNFIRE4_X10",
+           "build_synfire", "scale_synfire"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +65,28 @@ SYNFIRE4_MINI = SynfireConfig(
     w_exc=4.0, w_inh_drive=14.0, w_inh=-6.667,
     stim_pulse_hz=300.0, stim_pulse_ms=15.0, stim_rate_hz=0.0,
 )
+
+
+def scale_synfire(cfg: SynfireConfig, k: int, name: str | None = None) -> SynfireConfig:
+    """Scale group sizes ×k at *constant fan-in* (the paper's Table II
+    per-neuron connection counts). Per-neuron drive statistics — hence wave
+    dynamics and firing rates — are unchanged; only the population grows.
+    This is the fanin ≪ n_pre regime: dense ``[pre, post]`` storage scales
+    ×k² while the CSR fan-in layout scales ×k, so the sparse propagation
+    path is what keeps scaled-up Synfire inside an MCU-class budget."""
+    return dataclasses.replace(
+        cfg, name=name or f"{cfg.name}_x{k}",
+        n_exc=cfg.n_exc * k, n_inh=cfg.n_inh * k, n_stim=cfg.n_stim * k,
+    )
+
+
+# Synfire4×10: ~12k neurons / ~900k synapses at paper fan-in (60/25). Dense
+# fp16 weight rectangles would need ~56 MB (+28 MB bool masks) — 10× the
+# MCU budget — while the CSR fan-in layout stores ~5–6 MB of weight rows +
+# int16 index tables. The sparse-vs-packed scaling win is benchmarked by
+# ``benchmarks/bench_engine.py`` (build with ``budget=None``: the packed
+# baseline cannot fit the paper's 8 MB budget at this scale).
+SYNFIRE4_X10 = scale_synfire(SYNFIRE4, 10)
 
 
 def build_synfire(

@@ -13,8 +13,26 @@ The engine's hot path is selected by two ``NetStatic`` fields:
       per-projection ``dynamic_slice``/``dynamic_update_slice`` writes.
       Plastic / STP projections keep per-projection matmuls (their weights
       mutate every tick) but feed the same per-delay ring commit.
+    * ``"sparse"`` — non-plastic projections execute as CSR fan-in
+      gather + segment-sum buckets (``kind="sparse"``): weights are stored
+      as ``[post, fanin]`` rows, spike drive is an event-gated gather of
+      each post neuron's ``fanin`` sources, so per-tick bytes scale as
+      ``n_post × fanin`` instead of ``n_pre × n_post`` — the fanin ≪ n_pre
+      regime the paper's Synfire workloads live in. The fp16 → f32 decode
+      of the CSR weight rows is hoisted exactly like the packed images.
+    * ``"auto"`` — per-projection bytes-per-tick cost model picks dense
+      matmul vs sparse gather (``network._csr_wins``); small projections
+      pack densely, large sparse-fan-in ones gather.
     * ``"loop"`` — the seed per-projection reference path, kept verbatim
       for benchmarking and as a semantic oracle.
+
+    All non-loop modes share the same bucket machinery (event gating,
+    per-delay ring commit); a bucket's ``kind`` selects matmul vs gather.
+    With exactly-representable weights (the Synfire tables) a padded CSR
+    row sums the same terms as the dense dot (padding contributes exact
+    ``+0.0``), so all four modes produce bit-identical rasters — asserted
+    on full Synfire4 by ``tests/test_backends.py`` and on random nets by
+    ``tests/test_sparse.py``.
 
 ``backend``
     * ``"xla"`` (default) — plain jnp ops everywhere.
@@ -42,7 +60,9 @@ from repro.core import neurons as nrn
 from repro.core.plasticity import STDPState, _trace_step, stdp_step
 from repro.core.synapses import stp_update
 from repro.kernels.izh_update import izh4_update
+from repro.kernels.ref import izh4_ref
 from repro.kernels.stdp_update import stdp_update as stdp_kernel
+from repro.kernels.syn_gather import syn_gather
 from repro.kernels.syn_matmul import syn_matmul
 
 __all__ = [
@@ -59,15 +79,22 @@ _MAX_KBLOCK = 4096
 
 
 def assemble_packed(static, weights) -> tuple[jax.Array, ...]:
-    """Assemble the per-bucket block-dense weight images, decoded to f32.
+    """Assemble the per-bucket f32 weight payloads (decode hoisted).
+
+    Dense buckets get their block-dense ``[P, Q]`` image; sparse buckets
+    get their CSR weight rows ``[Q, fanin]`` decoded to f32 (the index
+    table is static and lives in ``NetParams.bucket_csr_idx``).
 
     ``weights`` is the per-projection tuple from ``NetState``; only
-    non-plastic projections appear in ``static.buckets`` so the images are
-    loop-invariant — callers (``engine.run``) build them once per device
-    program, outside the tick scan.
+    non-plastic projections appear in ``static.buckets`` so the payloads
+    are loop-invariant — callers (``engine.run``) build them once per
+    device program, outside the tick scan.
     """
     packed = []
     for b in static.buckets:
+        if b.kind == "sparse":
+            packed.append(weights[b.members[0][0]].astype(jnp.float32))
+            continue
         if len(b.members) == 1 and (b.p, b.q) == (
             static.projections[b.members[0][0]].pre_size,
             static.projections[b.members[0][0]].post_size,
@@ -98,12 +125,22 @@ def _matmul(static, pre_row: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.dot(pre_row, w.astype(jnp.float32))
 
 
+def _gather(static, pre_row: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Array:
+    """CSR fan-in drive ``[Q] = Σ_k pre_row[idx[q, k]] · w[q, k]`` via the
+    selected backend. ``w`` is the hoisted f32 CSR weight row payload;
+    padded cells carry weight 0 (exact-zero contributions)."""
+    if static.backend == "pallas":
+        return syn_gather(pre_row, idx, w, interpret=static.pallas_interpret)
+    return (jnp.take(pre_row, idx.astype(jnp.int32), axis=0) * w).sum(axis=1)
+
+
 def update_neurons_dispatch(static, params, neurons, i_syn):
     """Neuron integration step.
 
     IZH4-only euler networks (``static.izh4_only`` — the Synfire workloads)
     take a dedicated path: the pallas backend runs the fused VPU kernel,
-    the xla backend an IZH4-specialized jnp update that skips the generic
+    the xla backend the IZH4-specialized ``kernels.ref.izh4_ref`` update
+    (one shared expression tree with the kernel) that skips the generic
     three-model ``_derivs`` selects (~2.5× fewer elementwise ops per tick,
     bit-identical values — the dead IZH9/LIF branches never influence the
     selected lanes). Everything else falls back to the generic reference.
@@ -125,23 +162,21 @@ def update_neurons_dispatch(static, params, neurons, i_syn):
             dt=static.dt, substeps=static.substeps,
             interpret=static.pallas_interpret,
         )
-        v = v.astype(jnp.float32)
-        u = u.astype(jnp.float32)
     else:
-        v = neurons.v.astype(jnp.float32)
-        u = neurons.u.astype(jnp.float32)
-        i = i_syn.astype(jnp.float32)
-        h = static.dt / static.substeps
-        for _ in range(static.substeps):
-            dv = 0.04 * v * v + 5.0 * v + 140.0 - u + i
-            du = p.a * (p.b * v - u)
-            v = v + h * dv
-            u = u + h * du
-        spiked = v >= 30.0
-        v = jnp.where(spiked, p.c, v)
-        u = jnp.where(spiked, u + p.d, u)
-    # Generator / refractory handling identical to update_neurons so all
-    # paths agree bitwise (generators hold rest, refrac counts down).
+        v, u, spiked = izh4_ref(
+            neurons.v, neurons.u, i_syn.astype(jnp.float32),
+            p.a, p.b, p.c, p.d,
+            dt=static.dt, substeps=static.substeps,
+        )
+    v = v.astype(jnp.float32)
+    u = u.astype(jnp.float32)
+    # Generator handling identical to update_neurons (generators hold
+    # rest); refrac counts down and masks the spike flag, matching the
+    # generic path for every reachable state — refrac > 0 only ever arises
+    # for LIF neurons, which disable this fast path via izh4_only. (If
+    # IZH4 ever gains a refractory period, note the kernel applies the
+    # v>=30 reset before this mask while update_neurons resets only
+    # non-refractory spikers.)
     is_gen = p.model == nrn.NeuronModel.GENERATOR
     in_refrac = neurons.refrac > 0
     spiked = spiked & ~is_gen & ~in_refrac
@@ -152,8 +187,9 @@ def update_neurons_dispatch(static, params, neurons, i_syn):
 
 
 def propagate_packed(static, params, state, spikes, ring, t, packed):
-    """Fused propagation: bucket matmuls + per-projection fallbacks for
-    plastic/STP projections, merged into one ring commit per distinct delay.
+    """Fused propagation: bucket matmuls / CSR gathers + per-projection
+    fallbacks for plastic/STP projections, merged into one ring commit per
+    distinct delay.
 
     Returns ``(ring', new_stp)`` with ``new_stp`` aligned to
     ``static.projections``.
@@ -190,14 +226,19 @@ def propagate_packed(static, params, state, spikes, ring, t, packed):
         else:
             acc[delay_ms] = add(a)
 
-    # 1. packed buckets (non-plastic projections): one matmul per bucket
+    # 1. planned buckets (non-plastic projections): one matmul per dense
+    #    bucket, one CSR gather + segment-sum per sparse bucket
     for bi, b in enumerate(static.buckets):
         if b.pre_start >= 0:  # contiguous pre union -> static slice
             pre = spikes_f32[b.pre_start:b.pre_start + b.p]
         else:
             pre = spikes_f32[params.bucket_pre_ids[bi]]
-        emit(lambda pre=pre, bi=bi: _matmul(static, pre, packed[bi]),
-             pre.any() if static.event_gated else None,
+        if b.kind == "sparse":
+            fn = (lambda pre=pre, bi=bi:
+                  _gather(static, pre, params.bucket_csr_idx[bi], packed[bi]))
+        else:
+            fn = lambda pre=pre, bi=bi: _matmul(static, pre, packed[bi])
+        emit(fn, pre.any() if static.event_gated else None,
              b.delay_ms, b.channel, b.post_start, params.bucket_post_ids[bi])
 
     # 2. per-projection fallback: plastic / STP projections (weights change

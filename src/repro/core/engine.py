@@ -17,10 +17,16 @@ Execution strategy is selected by ``NetStatic`` (see ``repro.core.backend``):
 ``propagation="packed"`` (default) fuses all non-plastic projections into
 one block-dense matmul per distinct (delay, receptor) bucket and one
 scatter-add into the ring, with the fp16 → f32 weight decode hoisted out of
-the tick scan; ``backend="pallas"`` additionally routes neuron integration,
-the propagation matmuls, and pair-based STDP through the Pallas TPU kernels
-(interpret mode on CPU). ``propagation="loop"`` is the seed per-projection
-reference path, kept for benchmarking (``benchmarks/bench_engine.py``).
+the tick scan; ``propagation="sparse"`` stores those projections CSR
+(``[post, fanin]``) and computes drive by event-gated gather + segment-sum
+(bytes/tick ∝ ``n_post × fanin``); ``propagation="auto"`` picks dense vs
+sparse per projection by a bytes-per-tick cost model. ``backend="pallas"``
+additionally routes neuron integration, the propagation matmuls/gathers,
+and pair-based STDP through the Pallas TPU kernels (interpret mode on CPU).
+``propagation="loop"`` is the seed per-projection reference path, kept for
+benchmarking (``benchmarks/bench_engine.py``). ``run``/``run_batch``
+pre-draw generator uniforms identically in every mode, so same-seed runs
+are raster-comparable across modes.
 
 Throughput batching: :func:`run_batch` vmaps the scan over B independent
 trials (per-trial RNG streams, shared weights) in one device program — the
@@ -69,18 +75,22 @@ def step(
     calling ``step`` directly it may be omitted (assembled on the fly).
 
     ``gen_u`` is this tick's pre-drawn uniforms for the generator spans
-    (``[static.n_gen]``, from ``run``'s batched draw outside the scan).
-    When ``None`` the step draws per tick from ``state.key`` over the full
-    [N] vector — the seed behavior, kept for the "loop" path and direct
-    ``step`` calls. The two modes consume different RNG streams, so their
-    rasters differ realization-wise (not statistically).
+    (``[static.n_gen]``, from ``run``'s batched draw outside the scan —
+    ``_run_impl`` feeds it in EVERY propagation mode, loop included, so
+    same-seed runs are raster-comparable across modes). When ``None`` the
+    step draws per tick from ``state.key`` over the full [N] vector — the
+    seed behavior, kept only for direct ``step`` calls. The two modes
+    consume different RNG streams, so their rasters differ
+    realization-wise (not statistically).
     """
     f32 = jnp.float32
     t = state.t
-    if gen_u is None:
+    if gen_u is None and static.n_gen > 0:
         key, k_gen = jax.random.split(state.key)
     else:
-        key = state.key  # run() pre-split; the carry key passes through
+        # run() pre-split, or no generators at all (nothing consumes
+        # per-tick RNG) — the carry key passes through untouched.
+        key = state.key
     slot = jnp.mod(t, static.ring_len)
 
     # 1–2: delivery
@@ -106,7 +116,12 @@ def step(
     # 4: Poisson generators (rate in Hz -> p per tick); two-phase schedule:
     # pulse rate during [0, until_ms), sustained rate after.
     t_ms = t.astype(f32) * static.dt
-    if gen_u is None:
+    if static.n_gen == 0:
+        # No generators anywhere: skip the draw entirely (a generator-free
+        # net would otherwise pay a threefry split + [N] uniforms per tick
+        # for an all-False where).
+        spikes = spiked
+    elif gen_u is None:
         # Seed behavior: one uniform per neuron per tick from the carry key.
         in_pulse = t_ms < params.gen_until
         rate = jnp.where(in_pulse, params.gen_rate, params.gen_rate_after)
@@ -128,8 +143,9 @@ def step(
             spikes = spikes.at[g0:g0 + sz].set(gsp)
             off += sz
 
-    # 5: propagation into future ring slots
-    if static.propagation == "packed":
+    # 5: propagation into future ring slots ("packed"/"sparse"/"auto" all
+    # run the bucket plan; a bucket's kind selects matmul vs CSR gather)
+    if static.propagation != "loop":
         if packed is None:
             packed = be.assemble_packed(static, state.weights)
         ring, new_stp = be.propagate_packed(
@@ -219,19 +235,23 @@ def _run_impl(
         else jnp.zeros((n_steps, 0), jnp.float32)
     )
 
-    # Hoist the packed weight-image assembly (+ fp16 -> f32 decode) out of
-    # the tick scan: non-plastic weights are loop-invariant, so the scan
-    # body closes over the decoded images as constants.
+    # Hoist the bucket weight-payload assembly (+ fp16 -> f32 decode) out
+    # of the tick scan: non-plastic weights are loop-invariant, so the scan
+    # body closes over the decoded images / CSR rows as constants.
     packed = (
         be.assemble_packed(static, state.weights)
-        if static.propagation == "packed"
+        if static.propagation != "loop"
         else None
     )
 
-    # Packed path: pre-draw all generator uniforms in one vectorized call
-    # outside the scan (threefry on [T, n_gen] at once instead of a small
-    # per-tick draw over the full [N]) and feed them as scan inputs.
-    if static.propagation == "packed" and static.n_gen > 0:
+    # Pre-draw all generator uniforms in one vectorized call outside the
+    # scan (threefry on [T, n_gen] at once instead of a small per-tick draw
+    # over the full [N]) and feed them as scan inputs. This applies to
+    # EVERY propagation mode — including "loop" — so all modes consume the
+    # same RNG stream and their rasters are directly comparable (the
+    # cross-mode parity suite asserts bitwise equality on Synfire4).
+    # Direct ``step`` calls (gen_u=None) keep the seed per-tick draw.
+    if static.n_gen > 0:
         k_draw, k_carry = jax.random.split(state.key)
         gu_xs = jax.random.uniform(k_draw, (n_steps, static.n_gen),
                                    dtype=jnp.float32)

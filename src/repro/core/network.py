@@ -35,12 +35,14 @@ from repro.core.plasticity import (
     init_stdp_state,
 )
 from repro.core.synapses import (
+    CSRFanin,
     ProjectionParams,
     ProjectionSpec,
     STPConfig,
     STPState,
     build_bernoulli,
     build_fixed_fanin,
+    dense_to_csr,
     init_stp_state,
 )
 from repro.memory import MemoryLedger
@@ -63,14 +65,23 @@ class GroupSpec:
 
 @dataclasses.dataclass(frozen=True)
 class BucketSpec:
-    """One packed-propagation bucket, lowered to a single block-dense
-    ``[P, Q]`` matmul over the sorted union of its members' pre/post index
-    ranges. ``members`` places each projection's weight block at
-    ``(row, col)`` inside the bucket image. Buckets are formed per
-    (delay, ring-channel) pair when the member blocks fill the union
-    rectangle densely enough to amortize the fused matmul; sparse groups
-    are split into per-projection buckets (zero wasted cells) that still
-    share the hoisted f32 decode and the single ring scatter-add.
+    """One propagation bucket. ``kind`` selects the execution strategy:
+
+    * ``"dense"`` — a single block-dense ``[P, Q]`` matmul over the sorted
+      union of its members' pre/post index ranges. ``members`` places each
+      projection's weight block at ``(row, col)`` inside the bucket image.
+      Buckets are formed per (delay, ring-channel) pair when the member
+      blocks fill the union rectangle densely enough to amortize the fused
+      matmul; sparse groups are split into per-projection buckets (zero
+      wasted cells) that still share the hoisted f32 decode and the single
+      ring scatter-add.
+    * ``"sparse"`` — a single-projection CSR fan-in bucket: the member's
+      weights live as ``(idx, weight) [Q, fanin]`` rows
+      (``NetState.weights`` holds the CSR weight rows, the int indices sit
+      in ``NetParams.bucket_csr_idx``) and propagation is an event-gated
+      gather + segment-sum (``repro.kernels.syn_gather``) touching
+      ``Q × fanin`` cells per tick instead of ``P × Q``.
+
     ``pre_start >= 0`` marks a contiguous pre union starting there (the
     spike gather lowers to a static slice)."""
 
@@ -81,11 +92,32 @@ class BucketSpec:
     pre_start: int  # -1 => gather via params.bucket_pre_ids
     post_start: int  # -1 => scatter via params.bucket_post_ids
     members: tuple[tuple[int, int, int], ...]  # (proj_idx, row0, col0)
+    kind: str = "dense"  # "dense" (matmul) | "sparse" (CSR gather)
+    fanin: int = 0  # CSR row width (sparse buckets only)
 
 
 @dataclasses.dataclass(frozen=True)
 class NetStatic:
-    """Hashable network topology; closed over by the jitted step."""
+    """Hashable network topology; closed over by the jitted step.
+
+    Propagation mode contract (``propagation``):
+
+    * ``"packed"`` (default) — every non-plastic/non-STP projection lowers
+      to a dense bucket matmul (compile-time (delay, receptor) packing).
+    * ``"sparse"`` — every non-plastic/non-STP projection lowers to a CSR
+      fan-in gather bucket; its weights are *stored* CSR (``[post, fanin]``
+      rows in ``NetState.weights``) so both the memory ledger and the
+      per-tick byte traffic scale with ``n_post × fanin``.
+    * ``"auto"`` — per-projection cost model: a projection goes sparse when
+      the dense image reads ≥ ``_SPARSE_ADVANTAGE ×`` the CSR bytes per
+      tick (see ``_plan_buckets``); the rest pack densely as in "packed".
+    * ``"loop"`` — the seed per-projection reference path (dense storage),
+      kept verbatim as the semantic oracle and benchmark baseline.
+
+    All four modes integrate identical dynamics; with exactly-representable
+    weights (the Synfire tables) their spike rasters are bit-identical —
+    asserted by ``tests/test_sparse.py`` / ``tests/test_backends.py``.
+    """
 
     n: int
     ring_len: int
@@ -100,7 +132,7 @@ class NetStatic:
     coba: COBAConfig | None = None
     # -- execution strategy (see repro.core.backend) --------------------------
     backend: str = "xla"  # "xla" | "pallas"
-    propagation: str = "packed"  # "packed" | "loop" (seed per-projection path)
+    propagation: str = "packed"  # "packed" | "sparse" | "auto" | "loop"
     pallas_interpret: bool = True  # interpret-mode kernels (CPU containers)
     izh4_only: bool = False  # network is IZH4 + generators only (kernel-able)
     event_gated: bool = True  # skip a bucket's matmul when its pres are silent
@@ -117,6 +149,14 @@ class NetStatic:
     def n_gen(self) -> int:
         return sum(size for _, size in self.gen_spans)
 
+    @property
+    def csr_projs(self) -> frozenset[int]:
+        """Projection indices whose weights are stored CSR ``[post, fanin]``
+        (the members of sparse buckets) rather than dense ``[pre, post]``."""
+        return frozenset(
+            m[0] for b in self.buckets if b.kind == "sparse" for m in b.members
+        )
+
     def group(self, name: str) -> GroupSpec:
         for g in self.groups:
             if g.name == name:
@@ -130,7 +170,10 @@ class NetStatic:
 
 class NetParams(NamedTuple):
     neuron: nrn.NeuronParams
-    masks: tuple[jax.Array, ...]  # per projection [pre, post] bool
+    # Per projection [pre, post] bool; None for CSR-stored projections (the
+    # dense mask is never materialized on device — its bytes are replaced by
+    # the CSR index table, which is what the memory ledger accounts).
+    masks: tuple[jax.Array | None, ...]
     gen_rate: jax.Array  # [N] Hz during the pulse (0 for non-generators)
     gen_until: jax.Array  # [N] ms pulse end
     gen_rate_after: jax.Array  # [N] Hz sustained after the pulse
@@ -139,6 +182,12 @@ class NetParams(NamedTuple):
     # [Q_b] are the ring columns its fused matmul scatters into.
     bucket_pre_ids: tuple[jax.Array, ...] = ()
     bucket_post_ids: tuple[jax.Array, ...] = ()
+    # CSR fan-in index tables, aligned with static.buckets (None for dense
+    # buckets): idx[b] [Q_b, fanin_b] int16/int32 presynaptic sources, local
+    # to the bucket's pre slice. The matching weight rows live in
+    # NetState.weights[proj] (storage dtype; mutable by design even though
+    # sparse projections are non-plastic today).
+    bucket_csr_idx: tuple[jax.Array | None, ...] = ()
 
 
 class NetState(NamedTuple):
@@ -237,7 +286,7 @@ class NetworkBuilder:
     ) -> "CompiledNetwork":
         if backend not in ("xla", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
-        if propagation not in ("packed", "loop"):
+        if propagation not in ("packed", "sparse", "auto", "loop"):
             raise ValueError(f"unknown propagation {propagation!r}")
         if pallas_interpret is None:
             pallas_interpret = jax.default_backend() != "tpu"
@@ -271,7 +320,11 @@ class NetworkBuilder:
         with ledger.stage("2. Random Gen."):
             ledger.register("rng", (key, gen_rate, gen_until, gen_rate_after))
 
-        # 3. Conn. Info — connectivity masks (and the host-side build).
+        # 3. Conn. Info — connectivity (host-side build), realized fan-in
+        # metadata, and the propagation plan. The plan is computed *before*
+        # the ledger stages so sparse-assigned projections register CSR
+        # index tables instead of dense bool masks — the sizing report then
+        # reflects what actually lives on device against the 8 MB budget.
         rng = np.random.default_rng(self._seed)
         specs: list[ProjectionSpec] = []
         projs: list[ProjectionParams] = []
@@ -293,20 +346,52 @@ class NetworkBuilder:
             if c.stdp is not None and c.da_modulated and c.stdp.tau_elig is None:
                 c = dataclasses.replace(c, stdp=dataclasses.replace(c.stdp, tau_elig=100.0))
             stdp_cfgs.append(c.stdp)
+        for j, p in enumerate(projs):
+            m = np.asarray(p.mask)
+            specs[j] = dataclasses.replace(
+                specs[j],
+                fanin=int(m.sum(axis=0).max(initial=0)),
+                n_syn=int(m.sum()),
+            )
+        channels = 2 if conductances is not None else 1
+        buckets, pre_ids, post_ids = _plan_buckets(
+            tuple(specs), channels, pack_density, propagation
+        )
+        csr_set = frozenset(
+            m[0] for b in buckets if b.kind == "sparse" for m in b.members
+        )
+        csr: dict[int, CSRFanin] = {
+            j: dense_to_csr(projs[j].mask, projs[j].weight,
+                            fanin=specs[j].fanin, storage_dtype=wdt)
+            for j in sorted(csr_set)
+        }
+        bucket_csr_idx = tuple(
+            csr[b.members[0][0]].idx if b.kind == "sparse" else None
+            for b in buckets
+        )
+        masks = tuple(
+            None if j in csr_set else p.mask for j, p in enumerate(projs)
+        )
+        weights = tuple(
+            csr[j].weight if j in csr_set else p.weight
+            for j, p in enumerate(projs)
+        )
         with ledger.stage("3. Conn. Info"):
-            ledger.register("masks", tuple(p.mask for p in projs))
+            ledger.register("masks", tuple(m for m in masks if m is not None))
+            if csr:
+                ledger.register("csr.indices", tuple(c.idx for c in csr.values()))
 
-        # 4. Syn. State — weights (the fp16 payload), delay ring, STP.
+        # 4. Syn. State — weights (the fp16 payload; CSR rows for sparse
+        # projections), delay ring, STP.
         max_delay = max((s.delay_ms for s in specs), default=1)
         ring_len = max_delay + 1
-        channels = 2 if conductances is not None else 1
         ring = jnp.zeros((ring_len, n, channels), sdt)
         stp_states: list[STPState | None] = [
             init_stp_state(s.stp, s.pre_size, sdt) if s.stp is not None else None
             for s in specs
         ]
         with ledger.stage("4. Syn. State"):
-            ledger.register("weights", tuple(p.weight for p in projs))
+            ledger.register("weights", weights)
             ledger.register("ring", ring)
             ledger.register("stp", tuple(s for s in stp_states if s is not None))
 
@@ -340,9 +425,6 @@ class NetworkBuilder:
                     jax.ShapeDtypeStruct((monitor_ms_hint, n), jnp.bool_),
                 )
 
-        buckets, pre_ids, post_ids = _plan_buckets(
-            tuple(specs), channels, pack_density
-        )
         model_codes = np.asarray(neuron_params.model)
         izh4_only = bool(np.all(
             (model_codes == int(nrn.NeuronModel.GENERATOR))
@@ -360,50 +442,101 @@ class NetworkBuilder:
         )
         params = NetParams(
             neuron=neuron_params,
-            masks=tuple(p.mask for p in projs),
+            masks=masks,
             gen_rate=gen_rate,
             gen_until=gen_until,
             gen_rate_after=gen_rate_after,
             bucket_pre_ids=pre_ids,
             bucket_post_ids=post_ids,
+            bucket_csr_idx=bucket_csr_idx,
         )
         state0 = NetState(
             t=jnp.int32(0), key=key, neurons=nstate, ring=ring,
-            weights=tuple(p.weight for p in projs),
+            weights=weights,
             stp=tuple(stp_states), stdp=tuple(stdp_states), cond=cond,
         )
         return CompiledNetwork(static=static, params=params, state0=state0,
                                ledger=ledger, policy=policy)
 
 
-def _plan_buckets(
-    specs: tuple[ProjectionSpec, ...], channels: int, pack_density: float
-) -> tuple[tuple[BucketSpec, ...], tuple[jax.Array, ...], tuple[jax.Array, ...]]:
-    """Compile-time packing plan for non-plastic, non-STP projections.
+# How many × fewer bytes the CSR layout must touch per tick before a
+# projection is auto-assigned the sparse-gather path: a dense image streams
+# sequentially through the MXU / SIMD units while a CSR row does a random
+# gather per cell, so sparse must win on bytes by a healthy margin. Cost
+# per tick: dense reads 4·pre·post bytes (the hoisted f32 image); CSR reads
+# ≤ 8·post·fanin bytes (4-byte index — int16 tables halve this — plus the
+# hoisted 4-byte f32 weight). At paper fan-ins (tens) this flips to sparse
+# once pre grows to a few hundred — exactly the fanin ≪ n_pre regime.
+_SPARSE_ADVANTAGE = 4.0
 
-    Projections are grouped by (delay, ring-channel); each group lowers to
-    ONE block-dense matmul over the sorted union of its pre/post index
-    ranges — a member's rows/cols are a *contiguous* span inside the union
-    (ranges stay contiguous under sorted-union), so assembly is a
-    static-slice add. A fused union rectangle stores zeros wherever member
-    blocks don't cover it, so groups whose blocks fill less than
-    ``pack_density`` of the rectangle are split into per-projection buckets
-    (no wasted cells); either way every bucket shares the hoisted fp16→f32
-    decode and the single ring scatter-add, so the per-tick cost is pure
-    matmul + one scatter. Plastic/STP projections are excluded — their
-    weights change every tick, so the engine keeps per-projection matmuls
-    for them (they too feed the fused scatter).
+
+def _csr_wins(spec: ProjectionSpec) -> bool:
+    """Cost model: bytes touched per tick, dense matmul vs CSR gather."""
+    dense_bytes = 4 * spec.pre_size * spec.post_size
+    csr_bytes = 8 * spec.post_size * max(spec.fanin, 1)
+    return dense_bytes >= _SPARSE_ADVANTAGE * csr_bytes
+
+
+def _plan_buckets(
+    specs: tuple[ProjectionSpec, ...], channels: int, pack_density: float,
+    propagation: str = "packed",
+) -> tuple[tuple[BucketSpec, ...], tuple[jax.Array, ...], tuple[jax.Array, ...]]:
+    """Compile-time propagation plan for non-plastic, non-STP projections.
+
+    Each eligible projection is first assigned an execution strategy:
+
+    * ``propagation="sparse"`` forces every eligible projection onto the
+      CSR fan-in gather path (one ``kind="sparse"`` bucket each);
+    * ``propagation="auto"`` applies the bytes-per-tick cost model
+      (:func:`_csr_wins`) per projection;
+    * ``"packed"`` / ``"loop"`` keep every projection dense (unchanged
+      seed/PR-1 behavior).
+
+    Dense-assigned projections are then grouped by (delay, ring-channel);
+    each group lowers to ONE block-dense matmul over the sorted union of
+    its pre/post index ranges — a member's rows/cols are a *contiguous*
+    span inside the union (ranges stay contiguous under sorted-union), so
+    assembly is a static-slice add. A fused union rectangle stores zeros
+    wherever member blocks don't cover it, so groups whose blocks fill
+    less than ``pack_density`` of the rectangle are split into
+    per-projection buckets (no wasted cells); either way every bucket
+    shares the hoisted fp16→f32 decode and the single ring scatter-add,
+    so the per-tick cost is pure matmul + one scatter. Plastic/STP
+    projections are excluded — their weights change every tick, so the
+    engine keeps per-projection matmuls for them (they too feed the fused
+    scatter).
     """
     grouped: dict[tuple[int, int], list[int]] = {}
+    sparse_js: list[int] = []
     for j, s in enumerate(specs):
         if s.plastic or s.stp is not None:
             continue
         channel = 0 if (channels == 1 or s.receptor == "exc") else 1
-        grouped.setdefault((s.delay_ms, channel), []).append(j)
+        go_sparse = (propagation == "sparse"
+                     or (propagation == "auto" and _csr_wins(s)))
+        if go_sparse:
+            sparse_js.append(j)
+        else:
+            grouped.setdefault((s.delay_ms, channel), []).append(j)
 
     buckets: list[BucketSpec] = []
     pre_ids: list[jax.Array] = []
     post_ids: list[jax.Array] = []
+
+    for j in sparse_js:
+        s = specs[j]
+        buckets.append(BucketSpec(
+            delay_ms=s.delay_ms,
+            channel=0 if (channels == 1 or s.receptor == "exc") else 1,
+            p=s.pre_size, q=s.post_size,
+            pre_start=s.pre_start, post_start=s.post_start,
+            members=((j, 0, 0),), kind="sparse", fanin=s.fanin,
+        ))
+        # pre/post spans are contiguous by construction (single projection),
+        # so the gather/scatter id tables are never consulted — keep empty
+        # placeholders to preserve tuple alignment with static.buckets.
+        pre_ids.append(jnp.zeros((0,), jnp.int32))
+        post_ids.append(jnp.zeros((0,), jnp.int32))
 
     def unions(members: list[int]) -> tuple[np.ndarray, np.ndarray]:
         pres = np.unique(np.concatenate([
@@ -478,4 +611,6 @@ class CompiledNetwork:
 
     @property
     def n_synapses(self) -> int:
-        return int(sum(int(m.sum()) for m in self.params.masks))
+        # From compile-time metadata, not params.masks — CSR-stored
+        # projections never materialize a dense mask on device.
+        return int(sum(s.n_syn for s in self.static.projections))

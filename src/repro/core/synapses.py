@@ -22,11 +22,13 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
+    "CSRFanin",
     "ProjectionSpec",
     "ProjectionParams",
     "STPConfig",
     "STPState",
     "build_fixed_fanin",
+    "dense_to_csr",
     "propagate",
     "stp_update",
 ]
@@ -43,7 +45,14 @@ class STPConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ProjectionSpec:
-    """Static description of one connection group (paper Table II row)."""
+    """Static description of one connection group (paper Table II row).
+
+    ``fanin``/``n_syn`` are filled in at compile time from the realized
+    connectivity mask (max in-degree over post neurons / total synapse
+    count) — the planner's sparse-vs-dense cost model and the CSR row
+    width both key off the *realized* fan-in, which for the Bernoulli
+    connect mode exceeds the nominal Table II value.
+    """
 
     name: str
     pre_start: int
@@ -54,6 +63,8 @@ class ProjectionSpec:
     receptor: str  # "exc" (AMPA/NMDA) or "inh" (GABAa/GABAb)
     plastic: bool = False
     stp: STPConfig | None = None
+    fanin: int = 0  # realized max in-degree (compile-time)
+    n_syn: int = 0  # realized synapse count (compile-time)
 
     @property
     def pre_slice(self) -> slice:
@@ -131,6 +142,57 @@ def build_bernoulli(
     w = np.where(mask, np.float32(weight), np.float32(0.0))
     return ProjectionParams(
         weight=jnp.asarray(w, storage_dtype), mask=jnp.asarray(mask)
+    )
+
+
+class CSRFanin(NamedTuple):
+    """Fixed-width CSR fan-in layout of one projection.
+
+    ``idx[q, k]`` is the k-th presynaptic source of post neuron ``q``
+    (local to the projection's pre group, ascending within a row);
+    ``weight[q, k]`` the matching synaptic weight in the storage dtype.
+    Rows with fewer than ``fanin`` synapses are padded with index 0 and
+    weight 0 — an exact-zero contribution, so every consumer (oracle and
+    Pallas kernel) treats padding as bitwise neutral. ``idx`` uses int16
+    when the pre group fits (halving index bytes against the paper's
+    8 MB budget), int32 otherwise.
+    """
+
+    idx: jax.Array  # [post, fanin] int16/int32
+    weight: jax.Array  # [post, fanin] storage dtype
+
+
+def dense_to_csr(
+    mask: np.ndarray | jax.Array,
+    weight: np.ndarray | jax.Array,
+    *,
+    fanin: int | None = None,
+    storage_dtype=None,
+) -> CSRFanin:
+    """Convert a dense ``[pre, post]`` (mask, weight) pair to CSR fan-in.
+
+    Host-side numpy (compile time only). The per-row source order is
+    ascending pre index — a stable argsort over ``~mask`` floats the True
+    entries to the front of each column in index order, so the CSR
+    reduction order matches the dense matmul's index order.
+    """
+    m = np.asarray(mask)
+    w = np.asarray(weight, np.float32)
+    n_pre, n_post = m.shape
+    counts = m.sum(axis=0)
+    f = int(counts.max()) if fanin is None else fanin
+    # True-first stable sort per column -> ascending source ids per row.
+    order = np.argsort(~m, axis=0, kind="stable")[:f]  # [f, post]
+    valid = np.arange(f)[:, None] < counts[None, :]  # [f, post]
+    idx = np.where(valid, order, 0).T  # [post, f]
+    wq = np.where(valid, np.take_along_axis(w, order, axis=0), 0.0).T
+    idx_dtype = np.int16 if n_pre <= np.iinfo(np.int16).max else np.int32
+    if storage_dtype is None:
+        src = np.asarray(weight).dtype
+        storage_dtype = np.float32 if src == np.float64 else src
+    return CSRFanin(
+        idx=jnp.asarray(idx.astype(idx_dtype)),
+        weight=jnp.asarray(wq, storage_dtype),
     )
 
 

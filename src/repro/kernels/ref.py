@@ -34,6 +34,16 @@ def syn_matmul_ref(x, w):
     )
 
 
+def syn_gather_ref(spikes, idx, w):
+    """CSR fan-in drive: ``out[q] = Σ_k spikes[idx[q, k]] * w[q, k]``.
+
+    Same contract as :func:`repro.kernels.syn_gather.syn_gather` — padded
+    entries must carry weight 0 so they contribute an exact ``+0.0``.
+    """
+    g = jnp.take(spikes.astype(jnp.float32), idx.astype(jnp.int32), axis=0)
+    return (g * w.astype(jnp.float32)).sum(axis=1)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = -1,
                         scale: float | None = None):
     """Exact GQA attention. q [B, Hq, S, D]; k/v [B, Hkv, S, D]; Hq % Hkv == 0.

@@ -1,0 +1,80 @@
+"""Pallas kernel: event-driven CSR fan-in gather + segment-sum propagation.
+
+The dense ``syn_matmul`` path reads a ``[n_pre, n_post]`` weight rectangle
+every tick even when each post neuron has only a few dozen presynaptic
+partners — the fanin ≪ n_pre regime the paper's Synfire4 lives in
+(1,200 neurons, fan-in ≈ tens). This kernel instead consumes the CSR
+fan-in layout (``indices[n_post, fanin]``, ``weights[n_post, fanin]``):
+per post neuron, gather the spike bits of its ``fanin`` sources and
+reduce them against the fan-in weight row — bytes touched per tick scale
+as ``n_post × fanin`` instead of ``n_pre × n_post``.
+
+As in the packed path, the fp16 → f32 weight decode is hoisted out of the
+tick scan (``repro.core.backend.assemble_packed`` decodes the CSR weight
+rows once per run); the kernel accepts either storage dtype and casts at
+the VMEM load. Ragged rows are padded with ``index 0 / weight 0`` — the
+padded terms contribute an exact ``+0.0`` so the reduction is bitwise
+neutral.
+
+Layout: grid over post blocks; the full (padded) spike row stays resident
+in VMEM and is gathered per block with a vector ``take``. The fan-in axis
+is padded to the 128-lane width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+DEFAULT_BLOCK_Q = 256  # post neurons per grid step
+
+
+def _gather_kernel(s_ref, idx_ref, w_ref, o_ref):
+    spk = s_ref[...][0]  # [Pp] f32 spike row (padded)
+    idx = idx_ref[...]  # [bq, Fp] int32 presynaptic ids (padding -> 0)
+    w = w_ref[...].astype(jnp.float32)  # [bq, Fp] fan-in weights (padding -> 0)
+    g = jnp.take(spk, idx, axis=0)  # vector gather from VMEM
+    o_ref[...] = (g * w).sum(axis=1)[None, :]
+
+
+def syn_gather(spikes, idx, w, *, block_q: int = DEFAULT_BLOCK_Q,
+               interpret: bool = False):
+    """CSR fan-in drive: ``out[q] = Σ_k spikes[idx[q, k]] * w[q, k]``.
+
+    ``spikes`` [P] f32 (the projection's presynaptic spike row),
+    ``idx`` [Q, F] integer (any int dtype; promoted to int32),
+    ``w`` [Q, F] storage dtype (fp16/bf16/f32; decoded to f32 at the load).
+    Returns [Q] f32. Rows shorter than F must be padded with index 0 and
+    weight 0 (exact-zero contributions, bitwise neutral).
+    """
+    p = spikes.shape[0]
+    q, f = idx.shape
+    assert w.shape == (q, f), (idx.shape, w.shape)
+    if q == 0 or f == 0:
+        return jnp.zeros((q,), jnp.float32)
+    bq = min(block_q, _ceil_to(q, LANE))
+    fp = _ceil_to(f, LANE)
+    pp = _ceil_to(p, LANE)
+    qp = -q % bq
+    sp = jnp.pad(spikes.astype(jnp.float32), (0, pp - p))[None, :]
+    idxp = jnp.pad(idx.astype(jnp.int32), ((0, qp), (0, fp - f)))
+    wp = jnp.pad(w, ((0, qp), (0, fp - f)))
+    grid = ((q + qp) // bq,)
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, pp), lambda i: (0, 0)),  # spike row: resident
+            pl.BlockSpec((bq, fp), lambda i: (i, 0)),
+            pl.BlockSpec((bq, fp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], bq), jnp.float32),
+        interpret=interpret,
+    )(sp, idxp, wp)
+    return out.reshape(-1)[:q]
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

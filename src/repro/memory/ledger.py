@@ -113,6 +113,27 @@ class MemoryLedger:
             out[e.stage] = out.get(e.stage, 0) + e.nbytes
         return out
 
+    def name_bytes(self) -> dict[str, int]:
+        """Bytes per registration name (summed across stages).
+
+        Lets callers slice the sizing report by payload rather than load
+        step — e.g. ``benchmarks/bench_engine.py`` reports the synapse
+        footprint (``weights`` + ``masks`` + ``csr.indices``) per
+        propagation mode, which is where the CSR layout beats the dense
+        rectangles against the paper's 8 MB budget.
+        """
+        out: dict[str, int] = {}
+        for e in self._entries:
+            out[e.name] = out.get(e.name, 0) + e.nbytes
+        return out
+
+    def synapse_bytes(self) -> int:
+        """Connectivity + weight payload bytes (the paper's fp16 headline):
+        dense masks/weights plus CSR index tables, whichever each
+        projection actually stores."""
+        nb = self.name_bytes()
+        return sum(nb.get(k, 0) for k in ("weights", "masks", "csr.indices"))
+
     def rampup_rows(self) -> list[dict[str, float]]:
         """Rows in the paper's Table III/IV format (MB), in stage order."""
         per_stage = self.stage_bytes()

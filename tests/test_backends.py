@@ -11,7 +11,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.configs.synfire4 import SYNFIRE4_MINI, build_synfire
+from repro.configs.synfire4 import SYNFIRE4, SYNFIRE4_MINI, build_synfire
 from repro.core import Engine, NetworkBuilder, STDPConfig, izh4, run
 
 TICKS = 250  # >= 200 per the acceptance criterion
@@ -67,6 +67,45 @@ class TestBackendParity:
             rasters.append(np.asarray(out["spikes"]))
         assert rasters[0].sum() > 100
         assert np.array_equal(rasters[0], rasters[1])
+
+
+@pytest.mark.slow
+class TestFullSynfireParity:
+    """Full Synfire4 (1,200 neurons, generators live): every propagation
+    mode must produce the exact same raster. Generator uniforms are
+    pre-drawn identically in every mode (``engine._run_impl``), and the
+    Synfire weight table (1.0 / 3.5 / -2.0) is exactly representable in
+    both storage policies, so each tick's summations are exact — bitwise
+    equality is the correct assertion, not a tolerance."""
+
+    FULL_TICKS = 1000  # 1 s of model time, the paper's benchmark window
+
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    def test_all_propagation_modes_bitwise_identical(self, policy):
+        rasters = {}
+        for prop in ("loop", "packed", "sparse"):
+            net = build_synfire(SYNFIRE4, policy=policy, propagation=prop)
+            _, out = Engine(net).run(self.FULL_TICKS)
+            rasters[prop] = np.asarray(out["spikes"])
+        total = rasters["loop"].sum()
+        assert 20_000 <= total <= 33_000, f"degenerate run: {total} spikes"
+        for prop in ("packed", "sparse"):
+            diff = rasters["loop"] != rasters[prop]
+            assert np.array_equal(rasters["loop"], rasters[prop]), (
+                f"{policy}/{prop}: raster diverges from loop at tick "
+                f"{int(np.argwhere(diff.any(axis=1))[0][0])}"
+            )
+
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    def test_sparse_pallas_matches_xla_on_full_net(self, policy):
+        rasters = {}
+        for backend in ("xla", "pallas"):
+            net = build_synfire(SYNFIRE4, policy=policy,
+                                propagation="sparse", backend=backend)
+            _, out = Engine(net).run(self.FULL_TICKS)
+            rasters[backend] = np.asarray(out["spikes"])
+        assert rasters["xla"].sum() > 20_000
+        assert np.array_equal(rasters["xla"], rasters["pallas"])
 
 
 class TestBackendPlasticity:

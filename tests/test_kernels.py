@@ -12,6 +12,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.izh_update import izh4_update
 from repro.kernels.stdp_update import stdp_update
+from repro.kernels.syn_gather import syn_gather
 from repro.kernels.syn_matmul import syn_matmul
 
 I = True  # interpret mode (CPU container; kernels target TPU)
@@ -77,6 +78,77 @@ class TestSynMatmul:
         out = syn_matmul(jnp.asarray(spikes), w16, interpret=I)
         want = spikes @ np.asarray(w16, np.float32)
         np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6, atol=1e-5)
+
+
+class TestSynGather:
+    """CSR fan-in gather + segment-sum vs the jnp oracle (interpret mode)."""
+
+    def _case(self, seed, p, q, f, wdtype, ragged=True):
+        rng = np.random.default_rng(seed)
+        idx = rng.integers(0, p, (q, f))
+        w = rng.normal(0.0, 1.0, (q, f))
+        if ragged:
+            lens = rng.integers(0, f + 1, q)
+            valid = np.arange(f)[None, :] < lens[:, None]
+            idx = np.where(valid, idx, 0)
+            w = np.where(valid, w, 0.0)
+        spikes = jnp.asarray(rng.random(p) < 0.25, jnp.float32)
+        return spikes, jnp.asarray(idx, jnp.int32), jnp.asarray(w, wdtype)
+
+    @pytest.mark.parametrize("pqf", [
+        (200, 200, 60),    # Synfire4-scale projection
+        (2000, 2000, 60),  # Synfire4x10-scale (fanin << n_pre)
+        (50, 300, 7),      # fan-in narrower than a lane
+        (130, 257, 129),   # everything ragged vs the 128 padding
+        (1000, 3, 1000),   # tall fan-in, tiny post group
+    ])
+    @pytest.mark.parametrize("wdtype", [jnp.float16, jnp.float32])
+    def test_matches_ref(self, pqf, wdtype):
+        p, q, f = pqf
+        spikes, idx, w = self._case(0, p, q, f, wdtype)
+        out = syn_gather(spikes, idx, w, interpret=I)
+        want = ref.syn_gather_ref(spikes, idx, w)
+        assert out.shape == (q,) and out.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("wdtype", [jnp.float16, jnp.float32])
+    def test_ragged_last_row_and_padding_are_exact_zero(self, wdtype):
+        # A row whose tail is padding (idx 0, w 0) must contribute exactly
+        # the sum of its valid prefix, even when spikes[0] fires.
+        spikes = jnp.ones((8,), jnp.float32)  # every source fires
+        idx = jnp.asarray([[1, 3, 0, 0], [2, 0, 0, 0], [0, 0, 0, 0]], jnp.int32)
+        w = jnp.asarray([[0.5, 1.5, 0.0, 0.0],
+                         [2.0, 0.0, 0.0, 0.0],
+                         [0.0, 0.0, 0.0, 0.0]], wdtype)
+        out = np.asarray(syn_gather(spikes, idx, w, interpret=I))
+        np.testing.assert_array_equal(out, np.asarray([2.0, 2.0, 0.0], np.float32))
+
+    def test_golden_spike_semantics_bitwise_vs_dense(self):
+        # 0/1 spikes with exactly-representable weights: the CSR reduction
+        # must equal the dense matmul bit-for-bit (exact sums, any order).
+        from repro.core.synapses import dense_to_csr
+        rng = np.random.default_rng(3)
+        mask = rng.random((400, 300)) < 0.05
+        w = np.where(mask, rng.integers(1, 9, (400, 300)) * 0.25, 0.0)
+        w = w.astype(np.float32)
+        csr = dense_to_csr(mask, w)
+        spikes = jnp.asarray(rng.random(400) < 0.2, jnp.float32)
+        out = syn_gather(spikes, csr.idx, csr.weight, interpret=I)
+        want = jnp.dot(spikes, jnp.asarray(w))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    def test_int16_indices_accepted(self):
+        spikes, idx, w = self._case(5, 100, 64, 9, jnp.float16)
+        out16 = syn_gather(spikes, idx.astype(jnp.int16), w, interpret=I)
+        out32 = syn_gather(spikes, idx, w, interpret=I)
+        np.testing.assert_array_equal(np.asarray(out16), np.asarray(out32))
+
+    def test_empty_fanin_returns_zeros(self):
+        out = syn_gather(jnp.ones((10,), jnp.float32),
+                         jnp.zeros((4, 0), jnp.int32),
+                         jnp.zeros((4, 0), jnp.float32), interpret=I)
+        np.testing.assert_array_equal(np.asarray(out), np.zeros(4, np.float32))
 
 
 class TestFlashAttention:

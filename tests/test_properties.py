@@ -52,6 +52,94 @@ class TestDelayInvariants:
         assert counts.max() <= 50
 
 
+class TestSparseEquivalence:
+    """CSR↔dense propagation equivalence (the sparse backend contract).
+
+    Weights are drawn from an exactly-representable grid (multiples of
+    0.25) so every f32 summation order yields identical bits — bitwise
+    equality is then a *correctness* statement (same terms summed), not a
+    numerical accident. fp16 storage is held to allclose (the storage
+    round-trip can make padded-row orders observable for inexact values).
+    """
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.integers(min_value=1, max_value=160),
+           st.integers(min_value=1, max_value=90),
+           st.floats(min_value=0.05, max_value=0.6))
+    @settings(max_examples=25, deadline=None)
+    def test_csr_drive_bitwise_equals_dense_dot_fp32(self, seed, p, q, density):
+        from repro.core.synapses import dense_to_csr
+        from repro.kernels import ref
+
+        rng = np.random.default_rng(seed)
+        mask = rng.random((p, q)) < density
+        w = np.where(mask, rng.integers(-16, 17, (p, q)) * 0.25, 0.0)
+        w = w.astype(np.float32)
+        spikes = jnp.asarray(rng.random(p) < 0.3, jnp.float32)
+        csr = dense_to_csr(mask, w)
+        dense = np.asarray(jnp.dot(spikes, jnp.asarray(w)))
+        sparse = np.asarray(ref.syn_gather_ref(spikes, csr.idx, csr.weight))
+        np.testing.assert_array_equal(dense, sparse)
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_csr_drive_allclose_fp16(self, seed):
+        from repro.core.synapses import dense_to_csr
+        from repro.kernels import ref
+
+        rng = np.random.default_rng(seed)
+        mask = rng.random((100, 70)) < 0.3
+        w16 = jnp.asarray(np.where(mask, rng.normal(1.0, 0.5, (100, 70)), 0.0),
+                          jnp.float16)
+        spikes = jnp.asarray(rng.random(100) < 0.3, jnp.float32)
+        csr = dense_to_csr(np.asarray(mask), np.asarray(w16, np.float32),
+                           storage_dtype=jnp.float16)
+        dense = np.asarray(jnp.dot(spikes, w16.astype(jnp.float32)))
+        sparse = np.asarray(ref.syn_gather_ref(spikes, csr.idx, csr.weight))
+        np.testing.assert_allclose(dense, sparse, rtol=1e-6, atol=1e-5)
+
+    @given(st.integers(min_value=1, max_value=6),
+           st.integers(min_value=1, max_value=8),
+           st.sampled_from([0.5, 1.0, 2.0, 2.5, 4.0]))
+    @settings(max_examples=6, deadline=None)
+    def test_sparse_engine_bitwise_equals_loop_fp32(self, seed, delay, w):
+        """Random generator-driven nets: the full sparse tick (gather,
+        event gating, per-delay ring commit, unified RNG pre-draw) must
+        reproduce the seed loop path's raster bit-for-bit."""
+        def build(propagation):
+            net = NetworkBuilder(seed=seed)
+            net.add_spike_generator("g", 24, rate_hz=150.0)
+            net.add_group("e", izh4(20, a=0.02, b=0.2, c=-65.0, d=8.0))
+            net.add_group("i", izh4(8, a=0.1, b=0.2, c=-65.0, d=2.0))
+            net.connect("g", "e", fanin=6, weight=w, delay_ms=delay)
+            net.connect("e", "i", fanin=5, weight=2.0 * w, delay_ms=1)
+            net.connect("i", "e", fanin=3, weight=-1.5, delay_ms=2)
+            return net.compile(policy="fp32", propagation=propagation)
+
+        rasters = {}
+        for prop in ("loop", "sparse"):
+            c = build(prop)
+            _, out = run(c.static, c.params, c.state0, 80)
+            rasters[prop] = np.asarray(out["spikes"])
+        np.testing.assert_array_equal(rasters["loop"], rasters["sparse"])
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=4, deadline=None)
+    def test_event_gating_neutral_on_sparse_random_net(self, seed):
+        import dataclasses as dc
+
+        net = NetworkBuilder(seed=seed)
+        net.add_spike_generator("g", 16, rate_hz=60.0, until_ms=40.0)
+        net.add_group("n", izh4(12, a=0.02, b=0.2, c=-65.0, d=8.0))
+        net.connect("g", "n", fanin=4, weight=3.0, delay_ms=3)
+        c = net.compile(policy="fp16", propagation="sparse")
+        _, o1 = run(c.static, c.params, c.state0, 100)
+        _, o2 = run(dc.replace(c.static, event_gated=False), c.params,
+                    c.state0, 100)
+        np.testing.assert_array_equal(np.asarray(o1["spikes"]),
+                                      np.asarray(o2["spikes"]))
+
+
 class TestMoEInvariants:
     @given(st.integers(min_value=0, max_value=10_000))
     @settings(max_examples=10, deadline=None)

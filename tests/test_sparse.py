@@ -1,0 +1,272 @@
+"""CSR sparse-propagation backend: layout, cost model, parity, ledger.
+
+The sparse path must be a pure execution-strategy change: same dynamics,
+same rasters (bitwise in fp32 — Synfire weights are exactly representable,
+so every summation order produces identical bits), with memory and
+bytes-per-tick scaling as ``n_post × fanin`` instead of ``n_pre × n_post``.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.synfire4 import SYNFIRE4_MINI, build_synfire
+from repro.core import Engine, NetworkBuilder, STDPConfig, izh4, run
+from repro.core.network import _csr_wins, _plan_buckets
+from repro.core.synapses import ProjectionSpec, dense_to_csr
+from repro.kernels import ref
+
+TICKS = 250
+
+
+def _mini(policy="fp32", propagation="sparse", **kw):
+    return build_synfire(SYNFIRE4_MINI, policy=policy,
+                         propagation=propagation, **kw)
+
+
+class TestCSRLayout:
+    def _random_dense(self, seed=0, p=40, q=30, density=0.3):
+        rng = np.random.default_rng(seed)
+        mask = rng.random((p, q)) < density
+        w = np.where(mask, rng.integers(1, 8, (p, q)) * 0.25, 0.0).astype(np.float32)
+        return mask, w
+
+    def test_roundtrip_scatter_recovers_dense(self):
+        mask, w = self._random_dense()
+        csr = dense_to_csr(mask, w)
+        back = np.zeros_like(w)
+        idx = np.asarray(csr.idx)
+        wq = np.asarray(csr.weight, np.float32)
+        for q in range(w.shape[1]):
+            for k in range(idx.shape[1]):
+                if wq[q, k] != 0.0:
+                    back[idx[q, k], q] += wq[q, k]
+        np.testing.assert_array_equal(back, w)
+
+    def test_rows_sorted_ascending_and_padded_with_zero(self):
+        mask, w = self._random_dense(seed=3)
+        csr = dense_to_csr(mask, w)
+        idx = np.asarray(csr.idx)
+        wq = np.asarray(csr.weight, np.float32)
+        counts = mask.sum(axis=0)
+        assert idx.shape[1] == counts.max()
+        for q in range(mask.shape[1]):
+            c = counts[q]
+            valid = idx[q, :c]
+            assert np.all(np.diff(valid) > 0), "sources not ascending"
+            assert np.array_equal(valid, np.where(mask[:, q])[0])
+            assert np.all(wq[q, c:] == 0.0), "padding weight must be exact 0"
+
+    def test_fanin_override_pads_wider(self):
+        mask, w = self._random_dense(seed=4, density=0.1)
+        csr = dense_to_csr(mask, w, fanin=int(mask.sum(axis=0).max()) + 5)
+        assert csr.idx.shape[1] == int(mask.sum(axis=0).max()) + 5
+
+    def test_index_dtype_adapts_to_pre_size(self):
+        small = dense_to_csr(*self._random_dense(p=50))
+        assert small.idx.dtype == jnp.int16
+        rng = np.random.default_rng(0)
+        big_mask = rng.random((40_000, 4)) < 0.001
+        big_mask[0, :] = True  # no empty columns
+        big = dense_to_csr(big_mask, np.where(big_mask, 1.0, 0.0))
+        assert big.idx.dtype == jnp.int32
+
+    def test_storage_dtype_preserved(self):
+        mask, w = self._random_dense()
+        csr = dense_to_csr(mask, w, storage_dtype=jnp.float16)
+        assert csr.weight.dtype == jnp.float16
+
+    def test_csr_drive_equals_dense_dot(self):
+        mask, w = self._random_dense(seed=6, p=120, q=80)
+        csr = dense_to_csr(mask, w)
+        rng = np.random.default_rng(1)
+        spikes = jnp.asarray(rng.random(120) < 0.25, jnp.float32)
+        dense = np.asarray(jnp.dot(spikes, jnp.asarray(w)))
+        sparse = np.asarray(ref.syn_gather_ref(spikes, csr.idx, csr.weight))
+        np.testing.assert_array_equal(dense, sparse)  # exact weights -> bitwise
+
+
+class TestCostModel:
+    def _spec(self, pre, post, fanin, **kw):
+        return ProjectionSpec(name="t", pre_start=0, pre_size=pre,
+                              post_start=pre, post_size=post, delay_ms=1,
+                              receptor="exc", fanin=fanin, n_syn=post * fanin,
+                              **kw)
+
+    def test_small_dense_projection_stays_dense(self):
+        # Synfire4-scale: 200x200 at fanin 60 -> dense reads only ~1.7x the
+        # CSR bytes, not worth a random gather.
+        assert not _csr_wins(self._spec(200, 200, 60))
+
+    def test_large_sparse_fanin_projection_goes_sparse(self):
+        # Synfire4x10-scale: 2000x2000 at fanin 60 -> 16.7x byte advantage.
+        assert _csr_wins(self._spec(2000, 2000, 60))
+
+    def test_auto_assigns_per_projection(self):
+        specs = (self._spec(200, 200, 60), self._spec(2000, 2000, 60))
+        buckets, _, _ = _plan_buckets(specs, 1, 0.5, "auto")
+        kinds = {b.members[0][0]: b.kind for b in buckets}
+        assert kinds == {0: "dense", 1: "sparse"}
+
+    def test_sparse_forces_all_eligible(self):
+        specs = (self._spec(200, 200, 60),
+                 self._spec(200, 200, 60, plastic=True))
+        buckets, _, _ = _plan_buckets(specs, 1, 0.5, "sparse")
+        assert [b.kind for b in buckets] == ["sparse"]
+        # the plastic projection stays out of the plan (per-proj fallback)
+        assert buckets[0].members[0][0] == 0
+
+    def test_packed_plan_unchanged(self):
+        specs = (self._spec(2000, 2000, 60),)
+        buckets, _, _ = _plan_buckets(specs, 1, 0.5, "packed")
+        assert [b.kind for b in buckets] == ["dense"]
+
+
+class TestEngineParity:
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    def test_sparse_matches_loop_and_packed_bitwise(self, policy):
+        rasters = {}
+        for prop in ("loop", "packed", "sparse"):
+            _, out = Engine(_mini(policy, prop)).run(TICKS)
+            rasters[prop] = np.asarray(out["spikes"])
+        assert rasters["loop"].sum() > 50, "wave never ignited"
+        assert np.array_equal(rasters["loop"], rasters["sparse"])
+        assert np.array_equal(rasters["packed"], rasters["sparse"])
+
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    def test_pallas_gather_matches_xla_bitwise(self, policy):
+        rasters = {}
+        for backend in ("xla", "pallas"):
+            _, out = Engine(_mini(policy, "sparse", backend=backend)).run(TICKS)
+            rasters[backend] = np.asarray(out["spikes"])
+        assert rasters["xla"].sum() > 50
+        assert np.array_equal(rasters["xla"], rasters["pallas"])
+
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    def test_event_gating_is_bitwise_neutral(self, policy):
+        net = _mini(policy, "sparse")
+        gated = net.static
+        ungated = dataclasses.replace(gated, event_gated=False)
+        _, o1 = run(gated, net.params, net.state0, TICKS)
+        _, o2 = run(ungated, net.params, net.state0, TICKS)
+        assert np.array_equal(np.asarray(o1["spikes"]), np.asarray(o2["spikes"]))
+
+    def test_run_batch_sparse(self):
+        net = _mini("fp16", "sparse")
+        _, out = Engine(net).run_batch(100, 4)
+        sp = np.asarray(out["spikes"])
+        assert sp.shape == (4, 100, 186)
+        assert sp.sum() > 50
+        # same-seed batch of the packed build is bitwise identical: the
+        # trial RNG forking is propagation-independent
+        _, out2 = Engine(_mini("fp16", "packed")).run_batch(100, 4)
+        assert np.array_equal(sp, np.asarray(out2["spikes"]))
+
+    def test_auto_mixed_plan_matches_loop_bitwise(self):
+        """A plan that mixes kind="dense" and kind="sparse" buckets in the
+        SAME tick — the configuration only "auto" produces — must still
+        reproduce the loop raster bit-for-bit (distinct delays, channels,
+        and execution strategies all land in the right ring slots)."""
+        def build(propagation):
+            net = NetworkBuilder(seed=9)
+            net.add_spike_generator("g", 200, rate_hz=60.0)
+            net.add_group("e", izh4(200, a=0.02, b=0.2, c=-65.0, d=8.0))
+            net.add_group("i", izh4(40, a=0.1, b=0.2, c=-65.0, d=2.0))
+            # 200x200 @ fanin 8 -> 12.5x byte advantage: auto goes sparse
+            net.connect("g", "e", fanin=8, weight=2.5, delay_ms=3)
+            # 200x40 @ fanin 60 and 40x200 @ fanin 10 -> < 4x: stay dense
+            net.connect("e", "i", fanin=60, weight=0.5, delay_ms=1)
+            net.connect("i", "e", fanin=10, weight=-1.0, delay_ms=2)
+            return net.compile(policy="fp32", propagation=propagation)
+
+        auto = build("auto")
+        kinds = sorted(b.kind for b in auto.static.buckets)
+        assert kinds == ["dense", "dense", "sparse"], kinds
+        rasters = {}
+        for c in (auto, build("loop")):
+            _, out = run(c.static, c.params, c.state0, 200)
+            rasters[c.static.propagation] = np.asarray(out["spikes"])
+        assert rasters["loop"].sum() > 100
+        assert np.array_equal(rasters["loop"], rasters["auto"])
+
+    def test_coba_channels_route_identically(self):
+        """Conductance networks split exc/inh into ring channels; the
+        sparse gather must land its (abs-valued) contributions in the same
+        channel as the loop path."""
+        from repro.core.conductance import COBAConfig
+
+        def build(propagation):
+            net = NetworkBuilder(seed=2)
+            net.add_spike_generator("g", 20, rate_hz=120.0)
+            net.add_group("e", izh4(16, a=0.02, b=0.2, c=-65.0, d=8.0))
+            net.add_group("i", izh4(6, a=0.1, b=0.2, c=-65.0, d=2.0))
+            net.connect("g", "e", fanin=6, weight=1.0, delay_ms=2)
+            net.connect("e", "i", fanin=4, weight=2.0, delay_ms=1)
+            net.connect("i", "e", fanin=3, weight=-1.5, delay_ms=1)
+            return net.compile(policy="fp16", propagation=propagation,
+                               conductances=COBAConfig())
+
+        rasters = {}
+        for prop in ("loop", "sparse"):
+            c = build(prop)
+            if prop == "sparse":
+                assert len(c.static.csr_projs) == 3
+                assert {b.channel for b in c.static.buckets} == {0, 1}
+            _, out = run(c.static, c.params, c.state0, 200)
+            rasters[prop] = np.asarray(out["spikes"])
+        assert rasters["loop"].sum() > 20
+        assert np.array_equal(rasters["loop"], rasters["sparse"])
+
+    def test_plastic_projection_keeps_learning_under_sparse(self):
+        def build(propagation):
+            net = NetworkBuilder(seed=5)
+            net.add_spike_generator("pre", 30, rate_hz=80.0)
+            net.add_group("post", izh4(10, a=0.02, b=0.2, c=-65.0, d=8.0))
+            net.connect("pre", "post", fanin=15, weight=3.0, delay_ms=1,
+                        stdp=STDPConfig(a_plus=0.01, a_minus=0.002, w_max=6.0))
+            return net.compile(policy="fp16", propagation=propagation)
+
+        finals = {}
+        for prop in ("packed", "sparse"):
+            c = build(prop)
+            assert c.static.csr_projs == frozenset()  # plastic -> dense
+            final, out = run(c.static, c.params, c.state0, TICKS)
+            finals[prop] = (np.asarray(final.weights[0], np.float32),
+                            np.asarray(out["spikes"]))
+        assert np.array_equal(finals["packed"][1], finals["sparse"][1])
+        assert np.array_equal(finals["packed"][0], finals["sparse"][0])
+        w0 = np.asarray(build("sparse").state0.weights[0], np.float32)
+        assert finals["sparse"][0].sum() != w0.sum()
+
+
+class TestLedgerSizing:
+    def _net(self, propagation):
+        net = NetworkBuilder(seed=7)
+        net.add_spike_generator("g", 600, rate_hz=40.0)
+        net.add_group("a", izh4(600, a=0.02, b=0.2, c=-65.0, d=8.0))
+        net.connect("g", "a", fanin=12, weight=1.0, delay_ms=2)
+        return net.compile(policy="fp16", propagation=propagation)
+
+    def test_csr_bytes_replace_dense_bytes(self):
+        dense = self._net("packed").ledger
+        sparse = self._net("sparse").ledger
+        # 600x600 fp16 rectangle + bool mask vs 600x12 CSR rows + int16 idx
+        assert sparse.synapse_bytes() < dense.synapse_bytes() / 10
+        nb = sparse.name_bytes()
+        assert "csr.indices" in nb
+        # weights: [600, 12] fp16; indices: [600, 12] int16
+        assert nb["weights"] == 600 * 12 * 2
+        assert nb["csr.indices"] == 600 * 12 * 2
+
+    def test_auto_uses_csr_here(self):
+        # 600x600 at fanin 12: 25x byte advantage -> cost model goes sparse.
+        net = self._net("auto")
+        assert len(net.static.csr_projs) == 1
+        assert net.n_synapses == 600 * 12
+
+    def test_dense_mask_not_materialized_for_sparse(self):
+        net = self._net("sparse")
+        assert net.params.masks[0] is None
+        assert net.params.bucket_csr_idx[0] is not None
+        assert net.n_synapses == 600 * 12  # metadata survives CSR storage

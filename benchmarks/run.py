@@ -32,6 +32,7 @@ def _run(name, fn):
 
 def main(argv: list[str] | None = None) -> None:
     from benchmarks.bench_engine import bench_engine
+    from benchmarks.report import paper_report
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -40,11 +41,18 @@ def main(argv: list[str] | None = None) -> None:
 
     if args.smoke:
         def engine_fn():
-            # don't merge throwaway smoke timings into BENCH_engine.json
+            # don't merge throwaway smoke timings into BENCH_engine.json;
+            # DO enforce the <5% in-scan monitor overhead budget in CI
             return bench_engine(n_ticks=60, reps=1, x10_ticks=30,
-                                write_json=False)
+                                write_json=False, check_overhead=True)
+
+        def report_fn():
+            # full 1 s accuracy window (the headline number), shortened
+            # mini horizon; keep smoke numbers out of BENCH_engine.json
+            return paper_report(mini_ticks=3000, write_json=False)
     else:
         engine_fn = bench_engine
+        report_fn = paper_report
 
     results = {}
     for name, fn in [
@@ -54,6 +62,7 @@ def main(argv: list[str] | None = None) -> None:
         ("memory_fp16_halving", paper_tables.memory_fp16_halving),
         ("table5_performance", paper_tables.table5_performance),
         ("bench_engine", engine_fn),  # writes/merges BENCH_engine.json
+        ("paper_report", report_fn),  # accuracy / real-time / energy metrics
     ]:
         results[name] = _run(name, fn)
 

@@ -96,6 +96,7 @@ def build_synfire(
     seed: int = 42,
     budget: int | None = MCU_BUDGET_BYTES,
     monitor_ms_hint: int = 1000,
+    monitors: str | tuple | None = "default",
     method: str = "euler",
     backend: str = "xla",
     propagation: str = "packed",
@@ -108,6 +109,10 @@ def build_synfire(
     engine execution strategy (see ``repro.core.backend``): the default is
     the packed fused-matmul path on plain XLA; ``backend='pallas'`` routes
     the tick through the Pallas kernels (interpret mode off-TPU).
+    ``monitors`` attaches in-scan telemetry specs (``repro.telemetry``;
+    the default is exact per-group spike counts + filtered group rates) so
+    ``Engine.run(n, record="monitors")`` streams the paper's statistics
+    without a [T, N] raster.
     """
     net = NetworkBuilder(seed=seed)
     net.add_spike_generator(
@@ -139,6 +144,7 @@ def build_synfire(
 
     ledger = MemoryLedger(budget=budget, name=f"{cfg.name}/{policy}")
     return net.compile(policy=policy, ledger=ledger,
-                       monitor_ms_hint=monitor_ms_hint, method=method,
+                       monitor_ms_hint=monitor_ms_hint, monitors=monitors,
+                       method=method,
                        backend=backend, propagation=propagation,
                        pallas_interpret=pallas_interpret)

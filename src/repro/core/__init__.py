@@ -30,4 +30,10 @@ __all__ = [
     "STDPConfig", "STPConfig",
 ]
 
-from repro.core.sizing import M33, V5E, HardwareSpec, realtime_sizing  # noqa: E402
+from repro.core.sizing import (  # noqa: E402
+    M33,
+    PI_ZERO_2W,
+    V5E,
+    HardwareSpec,
+    realtime_sizing,
+)

@@ -31,6 +31,24 @@ are raster-comparable across modes.
 Throughput batching: :func:`run_batch` vmaps the scan over B independent
 trials (per-trial RNG streams, shared weights) in one device program — the
 packed weight images are decoded once and amortized across the batch.
+
+Recording (``record=``, a jit-static argument):
+
+* ``"raster"`` (default) — the seed behavior, bit-identical: outputs carry
+  the full ``[T, N]`` bool spike raster.
+* ``"monitors"`` — no raster is ever materialized. The compiled monitor
+  specs (``static.monitors``, see ``repro.telemetry``) ride the scan carry
+  as O(N)-or-smaller accumulators; outputs carry
+  ``{"telemetry": {name: array}}``. This is the constant-memory long-run
+  mode (telemetry state is independent of T; the pre-drawn generator
+  uniforms remain the only O(T·n_gen) input buffer).
+* ``"both"`` — raster and telemetry from the same ticks (the cross-check
+  mode: streamed group rates are bit-for-bit equal to raster-derived ones).
+* ``"none"`` — neither; the benchmark baseline for monitor overhead.
+
+``record_v`` / ``record_i`` stay independent switches for ``[T, N]``
+voltage/current traces (use ``telemetry.VoltageProbe`` for the streaming
+equivalent on selected neurons).
 """
 from __future__ import annotations
 
@@ -43,6 +61,7 @@ import jax.numpy as jnp
 
 from repro.core import backend as be
 from repro.core import neurons as nrn
+from repro.telemetry import monitors as tel
 from repro.core.conductance import coba_current, decay_and_deliver
 from repro.core.network import CompiledNetwork, NetParams, NetState, NetStatic
 from repro.core.plasticity import da_stdp_step
@@ -217,6 +236,9 @@ def _proj(w: jax.Array):
     return ProjectionParams(weight=w, mask=None)
 
 
+_RECORD_MODES = ("raster", "monitors", "both", "none")
+
+
 def _run_impl(
     static: NetStatic,
     params: NetParams,
@@ -225,14 +247,32 @@ def _run_impl(
     *,
     i_ext: jax.Array | None = None,  # [T, N] optional external current
     dopamine: jax.Array | None = None,  # [T] optional DA schedule
+    record: str = "raster",
     record_v: bool = False,
     record_i: bool = False,
 ):
+    if record not in _RECORD_MODES:
+        raise ValueError(f"record must be one of {_RECORD_MODES}, got {record!r}")
+    want_raster = record in ("raster", "both")
+    want_mon = record in ("monitors", "both")
+    if want_mon and not static.monitors:
+        raise ValueError(
+            "record requests monitors but the network was compiled with "
+            "monitors=() — pass monitor specs (or 'default') to compile()"
+        )
+
     ie_xs = i_ext if i_ext is not None else jnp.zeros((n_steps, 0), jnp.float32)
     da_xs = (
         dopamine.reshape(n_steps, 1)
         if dopamine is not None
         else jnp.zeros((n_steps, 0), jnp.float32)
+    )
+    # Local step index for telemetry (snapshot strides); width-0 when
+    # monitors are off so the raster-mode program is byte-identical.
+    ix_xs = (
+        jnp.arange(n_steps, dtype=jnp.int32).reshape(n_steps, 1)
+        if want_mon
+        else jnp.zeros((n_steps, 0), jnp.int32)
     )
 
     # Hoist the bucket weight-payload assembly (+ fp16 -> f32 decode) out
@@ -259,28 +299,48 @@ def _run_impl(
     else:
         gu_xs = jnp.zeros((n_steps, 0), jnp.float32)
 
+    tel0 = tel.init_carry(static, n_steps) if want_mon else ()
+
     def body_wrap(carry, xs):
-        ie, da, gu = xs
+        st, tel_c = carry
+        ie, da, gu, ix = xs
         ie = ie if ie.shape[-1] else None  # static shape: decided at trace time
         da = da[0] if da.shape[-1] else None
         gu = gu if gu.shape[-1] else None
-        new_state, out = step(static, params, carry, ie, da, packed=packed,
+        new_state, out = step(static, params, st, ie, da, packed=packed,
                               gen_u=gu)
-        ys = (out.spikes, out.v if record_v else None, out.i_syn if record_i else None)
-        return new_state, ys
+        if want_mon:
+            # Monitors fold this tick's observables into the carry — pure
+            # reads of the step output, so the dynamics (and the raster, if
+            # also recorded) are untouched.
+            tel_c, tel_ys = tel.update(static, tel_c, ix[0], out.spikes,
+                                       out.v, new_state.weights)
+        else:
+            tel_ys = None
+        ys = (out.spikes if want_raster else None,
+              out.v if record_v else None,
+              out.i_syn if record_i else None,
+              tel_ys)
+        return (new_state, tel_c), ys
 
-    final, ys = jax.lax.scan(body_wrap, state, (ie_xs, da_xs, gu_xs),
-                             length=n_steps)
-    spikes, v, i = ys
-    outputs = {"spikes": spikes}
+    (final, tel_final), ys = jax.lax.scan(
+        body_wrap, (state, tel0), (ie_xs, da_xs, gu_xs, ix_xs),
+        length=n_steps)
+    spikes, v, i, tel_ys = ys
+    outputs = {}
+    if want_raster:
+        outputs["spikes"] = spikes
     if record_v:
         outputs["v"] = v
     if record_i:
         outputs["i_syn"] = i
+    if want_mon:
+        outputs["telemetry"] = tel.collect(static, tel_final, tel_ys)
     return final, outputs
 
 
-@partial(jax.jit, static_argnames=("static", "n_steps", "record_v", "record_i"))
+@partial(jax.jit, static_argnames=("static", "n_steps", "record", "record_v",
+                                   "record_i"))
 def run(
     static: NetStatic,
     params: NetParams,
@@ -289,20 +349,25 @@ def run(
     *,
     i_ext: jax.Array | None = None,
     dopamine: jax.Array | None = None,
+    record: str = "raster",
     record_v: bool = False,
     record_i: bool = False,
 ):
     """Scan ``step`` for ``n_steps`` ticks; returns (state, outputs).
 
-    outputs.spikes: [T, N] bool raster (the paper's correctness metric is
-    total spike count over 1 s of model time).
+    ``record="raster"`` (default): outputs["spikes"] is the [T, N] bool
+    raster (the paper's correctness metric is total spike count over 1 s of
+    model time). ``record="monitors"``: no raster — outputs["telemetry"]
+    holds the compiled in-scan monitor accumulators (constant device memory
+    in T; see ``repro.telemetry``). ``"both"`` / ``"none"`` as named.
     """
     return _run_impl(static, params, state, n_steps, i_ext=i_ext,
-                     dopamine=dopamine, record_v=record_v, record_i=record_i)
+                     dopamine=dopamine, record=record, record_v=record_v,
+                     record_i=record_i)
 
 
-@partial(jax.jit, static_argnames=("static", "n_steps", "batch", "record_v",
-                                   "record_i"))
+@partial(jax.jit, static_argnames=("static", "n_steps", "batch", "record",
+                                   "record_v", "record_i"))
 def run_batch(
     static: NetStatic,
     params: NetParams,
@@ -310,6 +375,7 @@ def run_batch(
     n_steps: int,
     batch: int,
     *,
+    record: str = "raster",
     record_v: bool = False,
     record_i: bool = False,
 ):
@@ -330,7 +396,7 @@ def run_batch(
         # No vmap for a single trial — keep event gating and the lean
         # non-batched program, just add the leading axis.
         res = _run_impl(static, params, state._replace(key=keys[0]), n_steps,
-                        record_v=record_v, record_i=record_i)
+                        record=record, record_v=record_v, record_i=record_i)
         return jax.tree.map(lambda x: x[None], res)
 
     # Event gating uses lax.cond on a per-trial predicate; under vmap that
@@ -340,7 +406,7 @@ def run_batch(
 
     def one_trial(key):
         return _run_impl(static_b, params, state._replace(key=key), n_steps,
-                         record_v=record_v, record_i=record_i)
+                         record=record, record_v=record_v, record_i=record_i)
 
     return jax.vmap(one_trial)(keys)
 
@@ -365,3 +431,14 @@ class Engine:
     def spike_counts(self, n_steps: int, **kw) -> jax.Array:
         _, out = self.run(n_steps, **kw)
         return out["spikes"].sum(axis=0)
+
+    def run_monitored(self, n_steps: int, state: NetState | None = None,
+                      **kw) -> tuple[NetState, dict]:
+        """Constant-memory run: scan with in-scan monitors only (no [T, N]
+        raster) and return ``(final_state, summary)`` where ``summary`` is
+        the host-side ``repro.telemetry.summarize`` dict (exact group spike
+        counts/rates, filtered rates, probe traces)."""
+        from repro.telemetry import summarize
+
+        final, out = self.run(n_steps, state=state, record="monitors", **kw)
+        return final, summarize(self.net.static, out["telemetry"], n_steps)

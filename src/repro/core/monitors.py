@@ -1,42 +1,63 @@
-"""Spike analysis — CARLsim's SpikeMonitor/GroupMonitor statistics.
+"""Post-hoc spike analysis — the raster-side shim over the telemetry layer.
 
-Operates on the [T, N] boolean rasters produced by ``engine.run`` (the
-paper's correctness metric is the total spike count; these utilities add
-the per-group rates, ISI statistics, and synchrony measures CARLsim's
-monitors expose).
+Operates on the [T, N] boolean rasters produced by ``engine.run`` with
+``record="raster"``. Since the streaming telemetry subsystem landed
+(``repro.telemetry``), this module is the *post-hoc* counterpart: group
+rates are computed through the same
+:func:`repro.telemetry.metrics.rate_from_count` expression the in-scan
+``SpikeCount`` monitor uses, so for the same run the two paths agree
+bit-for-bit — long constant-memory runs should prefer
+``Engine.run(n, record="monitors")`` + ``telemetry.summarize`` and never
+materialize the raster at all.
+
+The ISI and synchrony statistics only exist post hoc (they need the full
+spike-time history) and are vectorized: no per-neuron Python loops, no
+``np.apply_along_axis``.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.network import NetStatic
+from repro.telemetry.metrics import rate_from_count
 
 __all__ = ["group_rates", "isi_stats", "synchrony_index", "population_summary"]
 
 
 def group_rates(static: NetStatic, raster: np.ndarray, dt_ms: float = 1.0) -> dict:
-    """Mean firing rate (Hz) per group over the raster window."""
+    """Mean firing rate (Hz) per group over the raster window.
+
+    Bit-for-bit equal to the streaming ``SpikeCount`` monitor's rates for
+    the same run: both reduce to an exact integer count and share
+    ``rate_from_count``.
+    """
     raster = np.asarray(raster)
-    t_s = raster.shape[0] * dt_ms / 1000.0
     out = {}
     for g in static.groups:
         sl = slice(g.start, g.start + g.size)
-        out[g.name] = float(raster[:, sl].sum() / (g.size * t_s))
+        out[g.name] = rate_from_count(raster[:, sl].sum(), g.size,
+                                      raster.shape[0], dt_ms)
     return out
 
 
 def isi_stats(raster: np.ndarray, dt_ms: float = 1.0) -> dict:
     """Inter-spike-interval mean/CV pooled over neurons (CV≈1 = Poisson-like,
-    CV≈0 = clockwork — synfire volleys sit in between)."""
+    CV≈0 = clockwork — synfire volleys sit in between).
+
+    Vectorized: transposing before ``nonzero`` yields spike coordinates
+    grouped by neuron (time-ascending within each), so all per-neuron ISIs
+    are one global ``diff`` masked to same-neuron pairs — same values in
+    the same pooled order as the per-neuron loop, in O(total spikes).
+    """
     raster = np.asarray(raster)
-    isis = []
-    for i in range(raster.shape[1]):
-        t = np.nonzero(raster[:, i])[0]
-        if len(t) >= 2:
-            isis.append(np.diff(t) * dt_ms)
-    if not isis:
+    n_idx, t_idx = np.nonzero(raster.T)
+    if t_idx.size >= 2:
+        dt_all = np.diff(t_idx)
+        isis = dt_all[np.diff(n_idx) == 0] * dt_ms
+    else:
+        isis = np.empty((0,), dtype=np.float64)
+    if isis.size == 0:
         return {"mean_ms": float("nan"), "cv": float("nan"), "n": 0}
-    isis = np.concatenate(isis)
     mean = float(isis.mean())
     cv = float(isis.std() / mean) if mean > 0 else float("nan")
     return {"mean_ms": mean, "cv": cv, "n": int(len(isis))}
@@ -45,12 +66,17 @@ def isi_stats(raster: np.ndarray, dt_ms: float = 1.0) -> dict:
 def synchrony_index(raster: np.ndarray, window: int = 5) -> float:
     """Golomb–Rinzel-style synchrony: variance of the population rate over
     mean single-neuron variance, smoothed over ``window`` ticks. 0 = async,
-    → 1 = perfectly synchronized volleys (synfire waves score high)."""
+    → 1 = perfectly synchronized volleys (synfire waves score high).
+
+    The smoothing is one vectorized sliding-window mean over the time axis
+    (f64 accumulation, like the old per-column ``np.convolve``) instead of
+    an O(N) Python loop via ``np.apply_along_axis``.
+    """
     raster = np.asarray(raster, dtype=np.float32)
     if raster.shape[0] < window * 2:
         return float("nan")
-    k = np.ones(window) / window
-    smooth = np.apply_along_axis(lambda x: np.convolve(x, k, "valid"), 0, raster)
+    windows = np.lib.stride_tricks.sliding_window_view(raster, window, axis=0)
+    smooth = windows.mean(axis=-1, dtype=np.float64)  # [T - window + 1, N]
     pop = smooth.mean(axis=1)
     var_pop = pop.var()
     var_ind = smooth.var(axis=0).mean()

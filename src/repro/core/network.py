@@ -47,6 +47,7 @@ from repro.core.synapses import (
 )
 from repro.memory import MemoryLedger
 from repro.precision import PrecisionPolicy, get_policy
+from repro.telemetry import monitors as telem
 
 __all__ = ["NetworkBuilder", "CompiledNetwork", "NetStatic", "NetParams",
            "NetState", "BucketSpec"]
@@ -137,6 +138,9 @@ class NetStatic:
     izh4_only: bool = False  # network is IZH4 + generators only (kernel-able)
     event_gated: bool = True  # skip a bucket's matmul when its pres are silent
     buckets: tuple[BucketSpec, ...] = ()
+    # Compiled in-scan monitor specs (repro.telemetry); the engine lowers
+    # them into scan-carry accumulators when run(record="monitors"/"both").
+    monitors: tuple[telem.MonitorSpec, ...] = ()
 
     @property
     def gen_spans(self) -> tuple[tuple[int, int], ...]:
@@ -279,6 +283,7 @@ class NetworkBuilder:
         conductances: COBAConfig | None = None,
         ledger: MemoryLedger | None = None,
         monitor_ms_hint: int = 0,
+        monitors: str | tuple | None = "default",
         backend: str = "xla",
         propagation: str = "packed",
         pallas_interpret: bool | None = None,
@@ -408,7 +413,11 @@ class NetworkBuilder:
         with ledger.stage("6. Group State"):
             ledger.register("neuron.params", neuron_params)
 
-        # 7. Auxiliary Data — plasticity traces + monitor buffers.
+        # 7. Auxiliary Data — plasticity traces + monitor buffers. The
+        # telemetry accumulators (scan-carry state + probe traces over a
+        # monitor_ms_hint horizon) are registered here so the sizing report
+        # accounts the streaming-monitor footprint — O(groups + probes·T),
+        # never the O(T·N) raster the `monitor.spikes` hint budgets for.
         stdp_states: list = []
         for spec, cfg in zip(specs, stdp_cfgs):
             if cfg is None:
@@ -417,12 +426,20 @@ class NetworkBuilder:
                 stdp_states.append(init_da_stdp_state(spec.pre_size, spec.post_size, sdt))
             else:
                 stdp_states.append(init_stdp_state(spec.pre_size, spec.post_size))
+        mon_specs = telem.resolve(monitors, n=n, n_projections=len(specs),
+                                  dt=dt)
         with ledger.stage("7. Auxiliary Data"):
             ledger.register("stdp.traces", tuple(s for s in stdp_states if s is not None))
             if monitor_ms_hint:
                 ledger.register(
                     "monitor.spikes",
                     jax.ShapeDtypeStruct((monitor_ms_hint, n), jnp.bool_),
+                )
+            if mon_specs:
+                ledger.register(
+                    "monitor.telemetry",
+                    telem.carry_struct(mon_specs, n, len(specs),
+                                       monitor_ms_hint or 1000),
                 )
 
         model_codes = np.asarray(neuron_params.model)
@@ -438,7 +455,7 @@ class NetworkBuilder:
             coba=conductances,
             backend=backend, propagation=propagation,
             pallas_interpret=pallas_interpret, izh4_only=izh4_only,
-            buckets=buckets,
+            buckets=buckets, monitors=mon_specs,
         )
         params = NetParams(
             neuron=neuron_params,

@@ -17,7 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["HardwareSpec", "V5E", "M33", "RealtimeSizing", "realtime_sizing"]
+__all__ = ["HardwareSpec", "V5E", "M33", "PI_ZERO_2W", "RealtimeSizing",
+           "realtime_sizing"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,6 +28,11 @@ class HardwareSpec:
     hbm_bw: float  # bytes/s
     link_bw: float  # bytes/s per ICI link (0 = single chip)
     chips: int = 1
+    # Energy model terms (repro.telemetry.metrics.energy_report): power
+    # drawn while the SNN computes, attributable to the cores themselves
+    # vs. the complete SoC/board (regulators, RAM, radios). 0 = unknown.
+    active_power_w: float = 0.0
+    soc_power_w: float = 0.0
 
 
 V5E = HardwareSpec(name="tpu_v5e", flops=197e12, hbm_bw=819e9, link_bw=50e9)
@@ -34,8 +40,20 @@ V5E = HardwareSpec(name="tpu_v5e", flops=197e12, hbm_bw=819e9, link_bw=50e9)
 # effective; PSRAM QSPI @133 MHz × 4 bits ≈ 66 MB/s. With these constants the
 # compute term caps real-time at ≈190 neurons (fanin 60, event-driven) —
 # matching the paper's measured 186 and its statement that the mini SNN is
-# processing- not memory-bound.
-M33 = HardwareSpec(name="rp2350_m33", flops=7.5e6, hbm_bw=66e6, link_bw=0.0)
+# processing- not memory-bound. Power: the paper measures 20 mW for the SNN
+# computation itself; the complete SparkFun Pro Micro board (regulator,
+# PSRAM, LED) draws ~95 mW from the socket.
+M33 = HardwareSpec(name="rp2350_m33", flops=7.5e6, hbm_bw=66e6, link_bw=0.0,
+                   active_power_w=0.020, soc_power_w=0.095)
+# Raspberry Pi Zero 2 W (quad Cortex-A53 @1 GHz, 512 MB LPDDR2) — the
+# paper's energy baseline. CARLsim runs single-threaded: ~2 sustained f32
+# FLOP/cycle on one core; one LPDDR2 channel streams ~2 GB/s. Power terms
+# calibrated to the paper's measured comparison: ~100 mW of core power
+# attributable to the SNN process (5× the MCU's 20 mW) and ~1.1 W for the
+# complete SoC + board under load (an order of magnitude over the MCU
+# board) — the abstract's "five times / order of magnitude" claims.
+PI_ZERO_2W = HardwareSpec(name="pi_zero_2w", flops=2.0e9, hbm_bw=2.0e9,
+                          link_bw=0.0, active_power_w=0.100, soc_power_w=1.1)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -127,6 +127,14 @@ class MemoryLedger:
             out[e.name] = out.get(e.name, 0) + e.nbytes
         return out
 
+    def monitor_bytes(self) -> int:
+        """Telemetry/monitor payload bytes: the in-scan accumulator state
+        (``monitor.telemetry``, registered by ``network.compile`` — the
+        peak monitor-state footprint of a ``record="monitors"`` run) plus
+        any post-hoc raster buffer hint (``monitor.spikes``)."""
+        nb = self.name_bytes()
+        return sum(v for k, v in nb.items() if k.startswith("monitor."))
+
     def synapse_bytes(self) -> int:
         """Connectivity + weight payload bytes (the paper's fp16 headline):
         dense masks/weights plus CSR index tables, whichever each

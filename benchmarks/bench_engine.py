@@ -19,6 +19,17 @@ SpikeCount + GroupRate accumulators riding the scan carry). The
 ``check_overhead`` flag (set by ``benchmarks/run.py --smoke`` so CI
 enforces it) asserts monitors cost < 5% over the bare scan.
 
+**Plastic at scale** (net ``synfire4_x10_stdp``): Synfire4×10 with
+pair-based STDP on the exc→exc feed-forward chain
+(``configs.synfire4.CHAIN_STDP``), dense plastic rectangles
+(``propagation="packed"``, outer-product STDP — unbudgetable: ~46 MB of
+plastic weights+masks alone) vs CSR fan-in rows (``"sparse"``,
+gather+elementwise row STDP, built under the paper's 8.477 MB budget).
+``check_plastic`` (also set by ``--smoke``) gates sparse-plastic ≤
+dense-plastic ms/tick and the sparse plastic build's total ledger under
+the MCU budget; the JSON records plastic weight+eligibility bytes per
+mode under ``ledger_plastic_bytes``.
+
 Each (config, path, batch, record) cell is timed ``reps`` times interleaved (the
 container shares cores with other processes; we report the best rep, the
 standard practice for throughput kernels) after a compile+warmup run, and
@@ -44,12 +55,15 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs.synfire4 import (  # noqa: E402
+    CHAIN_STDP,
     SYNFIRE4,
     SYNFIRE4_MINI,
     SYNFIRE4_X10,
     build_synfire,
 )
 from repro.core import Engine  # noqa: E402
+from repro.memory import MCU_BUDGET_BYTES  # noqa: E402
+from repro.precision.policy import tree_bytes  # noqa: E402
 
 _REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
@@ -116,7 +130,8 @@ def _merge_payload(out_path: str, payload: dict) -> dict:
     for r in payload["results"]:
         merged[key(r)] = r
     payload["results"] = list(merged.values())
-    for field in ("speedup_vs_seed_loop", "ledger_synapse_bytes"):
+    for field in ("speedup_vs_seed_loop", "ledger_synapse_bytes",
+                  "ledger_plastic_bytes"):
         base = old.get(field, {})
         for net, d in payload.get(field, {}).items():
             base.setdefault(net, {}).update(d)
@@ -180,13 +195,26 @@ def monitor_overhead(n_ticks: int = 1000, reps: int = 20,
     return min(best[2] / min(best[0], best[1]), best[3] / best[1]) - 1.0
 
 
+def _plastic_bytes(net) -> int:
+    """Weight + DA-eligibility bytes of the plastic projections — the
+    payload the CSR fan-in layout shrinks (the acceptance metric: ≥ 10×
+    below the dense rectangles on the ×10 config)."""
+    wb = sum(tree_bytes(net.state0.weights[j])
+             for j, s in enumerate(net.static.projections) if s.plastic)
+    eb = sum(tree_bytes(st.elig) for st in net.state0.stdp
+             if st is not None and hasattr(st, "elig"))
+    return wb + eb
+
+
 def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
-                 write_json: bool = True,
-                 check_overhead: bool = False) -> tuple[list[dict], dict]:
+                 plastic_ticks: int = 100, write_json: bool = True,
+                 check_overhead: bool = False,
+                 check_plastic: bool = False) -> tuple[list[dict], dict]:
     results: list[dict] = []
     # (cfg_label, path, batch, record, n, ticks, runner) — timed interleaved
     cells = []
     ledger_bytes: dict[str, dict[str, int]] = {}
+    plastic_bytes: dict[str, dict[str, int]] = {}
 
     # Monitor overhead first, while the process is quiet: measuring after
     # the sweep (with the ×10 engines and their 80 MB packed images still
@@ -245,6 +273,27 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
         cells.append((SYNFIRE4_X10.name, prop, 1, "raster", e.net.n_neurons,
                       x10_ticks, lambda k, e=e: e.run(k)[1]["spikes"]))
 
+    # Plastic Synfire4×10 (STDP on the feed-forward chain): dense plastic
+    # rectangles + outer-product STDP vs CSR fan-in rows + row STDP. The
+    # sparse build runs UNDER the MCU budget (that it compiles at all is
+    # part of the claim); the dense one cannot (48 MB of plastic
+    # weights+masks), so it is built unbudgeted as the baseline.
+    x10p = f"{SYNFIRE4_X10.name}_stdp"
+    plastic_engines = {}
+    for prop in ("packed", "sparse"):
+        net = build_synfire(
+            SYNFIRE4_X10, policy="fp16", propagation=prop,
+            stdp_chain=CHAIN_STDP, monitor_ms_hint=0,
+            budget=MCU_BUDGET_BYTES if prop == "sparse" else None,
+        )
+        ledger_bytes.setdefault(x10p, {})[prop] = net.ledger.synapse_bytes()
+        plastic_bytes.setdefault(x10p, {})[prop] = _plastic_bytes(net)
+        e = plastic_engines[prop] = Engine(net)
+        cells.append((x10p, prop, 1, "raster", net.n_neurons,
+                      plastic_ticks, lambda k, e=e: e.run(k)[1]["spikes"]))
+    sparse_plastic_ledger_mb = (
+        plastic_engines["sparse"].net.ledger.total_used / 1024**2)
+
     walls = _time_cells(cells, reps)
     for (name, path, batch, record, n, ticks, fn), wall in zip(cells, walls):
         us_per_tick = wall / ticks * 1e6
@@ -285,6 +334,43 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
             cell(SYNFIRE4_X10.name, "packed", 1)["us_per_tick"]
             / cell(SYNFIRE4_X10.name, "sparse", 1)["us_per_tick"], 2),
     }
+    plastic_speedup = round(
+        cell(x10p, "packed", 1)["us_per_tick"]
+        / cell(x10p, "sparse", 1)["us_per_tick"], 2)
+    plastic_bytes_ratio = round(
+        plastic_bytes[x10p]["packed"] / plastic_bytes[x10p]["sparse"], 1)
+    speedup[x10p] = {"sparse_vs_packed": plastic_speedup}
+    if check_plastic:
+        # The byte ratio is deterministic (pure ledger arithmetic), so gate
+        # the ISSUE's >= 10x storage claim hard; the timing gate is only
+        # sparse <= dense because wall clocks on the shared container are
+        # not — and the true gap (~4-5x) leaves headroom. A failing timing
+        # measurement is retried after a cool-down (same policy as
+        # check_overhead): one stalled rep must not fail a clean PR, while
+        # a real regression fails every attempt.
+        assert plastic_bytes_ratio >= 10.0, (
+            f"plastic ×10 weight+eligibility bytes only "
+            f"{plastic_bytes_ratio}× below the dense rectangles "
+            f"({plastic_bytes[x10p]})"
+        )
+        assert sparse_plastic_ledger_mb <= MCU_BUDGET_BYTES / 1024**2, (
+            f"plastic ×10 sparse ledger {sparse_plastic_ledger_mb:.2f} MB "
+            "over the paper's 8.477 MB budget"
+        )
+        for _ in range(2):
+            if plastic_speedup >= 1.0:
+                break
+            time.sleep(20)
+            retry = [c for c in cells if c[0] == x10p]
+            rw = _time_cells(retry, max(reps, 2))
+            us = {c[1]: w / c[5] * 1e6 for c, w in zip(retry, rw)}
+            plastic_speedup = max(plastic_speedup,
+                                  round(us["packed"] / us["sparse"], 2))
+        assert plastic_speedup >= 1.0, (
+            "sparse-plastic tick slower than the dense-plastic baseline "
+            f"(speedup {plastic_speedup}×) after retries"
+        )
+        speedup[x10p] = {"sparse_vs_packed": plastic_speedup}
 
     if write_json:
         out_path = os.path.join(_REPO_ROOT, "BENCH_engine.json")
@@ -296,6 +382,7 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
             "results": results,
             "speedup_vs_seed_loop": speedup,
             "ledger_synapse_bytes": ledger_bytes,
+            "ledger_plastic_bytes": plastic_bytes,
         })
         with open(out_path, "w") as f:
             json.dump(payload, f, indent=1)
@@ -315,6 +402,13 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
             round(ledger_bytes[x10]["packed"] / 1024**2, 2),
         "synfire4_x10_sparse_synapse_mb":
             round(ledger_bytes[x10]["sparse"] / 1024**2, 2),
+        "plastic_x10_sparse_vs_dense_speedup": plastic_speedup,
+        "plastic_x10_dense_weight_elig_mb":
+            round(plastic_bytes[x10p]["packed"] / 1024**2, 2),
+        "plastic_x10_sparse_weight_elig_mb":
+            round(plastic_bytes[x10p]["sparse"] / 1024**2, 2),
+        "plastic_x10_bytes_ratio": plastic_bytes_ratio,
+        "plastic_x10_sparse_ledger_mb": round(sparse_plastic_ledger_mb, 2),
     }
     return results, derived
 

@@ -42,9 +42,12 @@ def main(argv: list[str] | None = None) -> None:
     if args.smoke:
         def engine_fn():
             # don't merge throwaway smoke timings into BENCH_engine.json;
-            # DO enforce the <5% in-scan monitor overhead budget in CI
+            # DO enforce the <5% in-scan monitor overhead budget, the
+            # sparse-plastic ≤ dense-plastic tick gate, and the plastic ×10
+            # sparse build fitting the 8.477 MB MCU budget
             return bench_engine(n_ticks=60, reps=1, x10_ticks=30,
-                                write_json=False, check_overhead=True)
+                                plastic_ticks=20, write_json=False,
+                                check_overhead=True, check_plastic=True)
 
         def report_fn():
             # full 1 s accuracy window (the headline number), shortened

@@ -11,6 +11,11 @@ neurons, CSR sparse propagation). The raster would be ~120 MB of bools;
 the telemetry carry is 8 bytes/neuron regardless of run length.
 
   PYTHONPATH=src python examples/quickstart.py
+
+For *learning* at this scale — STDP on the Synfire4×10 chain with CSR
+fan-in plasticity, still inside the 8.477 MB budget, plus the chunked
+generator pre-draw (``gen_chunk``) for unbounded horizons — see
+``examples/plastic_at_scale.py``.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

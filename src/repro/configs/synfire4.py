@@ -19,10 +19,11 @@ import math
 
 from repro.core.network import CompiledNetwork, NetworkBuilder
 from repro.core.neurons import izh4
+from repro.core.plasticity import STDPConfig
 from repro.memory import MCU_BUDGET_BYTES, MemoryLedger
 
 __all__ = ["SynfireConfig", "SYNFIRE4", "SYNFIRE4_MINI", "SYNFIRE4_X10",
-           "build_synfire", "scale_synfire"]
+           "CHAIN_STDP", "build_synfire", "scale_synfire"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +90,13 @@ def scale_synfire(cfg: SynfireConfig, k: int, name: str | None = None) -> Synfir
 SYNFIRE4_X10 = scale_synfire(SYNFIRE4, 10)
 
 
+# STDP configuration for the plastic Synfire variant: mild pair-based
+# learning on the feed-forward chain. a± sit an order below the mini
+# weights so 1 s of volleys drifts weights measurably without detonating
+# the wave; w_max caps runaway LTP on the recurrent closure.
+CHAIN_STDP = STDPConfig(a_plus=0.004, a_minus=0.0033, w_max=4.0)
+
+
 def build_synfire(
     cfg: SynfireConfig = SYNFIRE4,
     *,
@@ -101,6 +109,7 @@ def build_synfire(
     backend: str = "xla",
     propagation: str = "packed",
     pallas_interpret: bool | None = None,
+    stdp_chain: STDPConfig | None = None,
 ) -> CompiledNetwork:
     """Build the Synfire benchmark under a precision policy.
 
@@ -113,6 +122,13 @@ def build_synfire(
     the default is exact per-group spike counts + filtered group rates) so
     ``Engine.run(n, record="monitors")`` streams the paper's statistics
     without a [T, N] raster.
+
+    ``stdp_chain`` makes the exc→exc feed-forward chain (Cexc{i}→Cexc{i+1}
+    and the recurrent closure) *plastic* with the given pair-based STDP —
+    the at-scale learning workload (:data:`CHAIN_STDP` is the benchmarked
+    setting). Under ``propagation="sparse"``/``"auto"`` those projections
+    store CSR fan-in rows, which is what keeps a plastic ``SYNFIRE4_X10``
+    inside the paper's 8.477 MB budget (``benchmarks/bench_engine.py``).
     """
     net = NetworkBuilder(seed=seed)
     net.add_spike_generator(
@@ -130,7 +146,8 @@ def build_synfire(
                 delay_ms=cfg.delay_ff, mode=cfg.connect_mode)
     for i in range(cfg.n_segments - 1):
         net.connect(f"Cexc{i}", f"Cexc{i + 1}", fanin=cfg.fanin_exc,
-                    weight=cfg.w_exc, delay_ms=cfg.delay_ff, mode=cfg.connect_mode)
+                    weight=cfg.w_exc, delay_ms=cfg.delay_ff, mode=cfg.connect_mode,
+                    stdp=stdp_chain)
         net.connect(f"Cexc{i}", f"Cinh{i + 1}", fanin=cfg.fanin_exc,
                     weight=cfg.w_inh_drive, delay_ms=cfg.delay_ff, mode=cfg.connect_mode)
         net.connect(f"Cinh{i + 1}", f"Cexc{i + 1}", fanin=cfg.fanin_inh,
@@ -138,7 +155,7 @@ def build_synfire(
     # Recurrent closure: segment 3 -> segment 0.
     last = cfg.n_segments - 1
     net.connect(f"Cexc{last}", "Cexc0", fanin=cfg.fanin_exc, weight=cfg.w_exc,
-                delay_ms=cfg.delay_ff, mode=cfg.connect_mode)
+                delay_ms=cfg.delay_ff, mode=cfg.connect_mode, stdp=stdp_chain)
     net.connect(f"Cexc{last}", "Cinh0", fanin=cfg.fanin_exc,
                 weight=cfg.w_inh_drive, delay_ms=cfg.delay_ff, mode=cfg.connect_mode)
 

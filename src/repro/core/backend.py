@@ -34,6 +34,18 @@ The engine's hot path is selected by two ``NetStatic`` fields:
     on full Synfire4 by ``tests/test_backends.py`` and on random nets by
     ``tests/test_sparse.py``.
 
+    **Plastic projections** (non-STP) never join buckets — their weights
+    mutate every tick — but in every non-loop mode both their drive
+    (:func:`plastic_drive`) and their STDP update (:func:`stdp_dispatch`)
+    run on fan-in rows over ``NetParams.proj_csr_idx``: CSR-stored
+    projections (``static.plastic_csr``, assigned by "sparse"/"auto") read
+    their ``[post, fanin]`` rows directly; dense-stored ones gather the
+    same rows out of the rectangle. Same terms, same order ⇒ packed,
+    sparse, and auto stay bit-identical on plastic nets even after STDP
+    pushes weights off the representable grid
+    (``tests/test_plasticity_sparse.py``). "loop" keeps the seed dense
+    dot + outer-product STDP as the semantic oracle.
+
 ``backend``
     * ``"xla"`` (default) — plain jnp ops everywhere.
     * ``"pallas"`` — neuron integration through the fused
@@ -57,10 +69,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import neurons as nrn
-from repro.core.plasticity import STDPState, _trace_step, stdp_step
+from repro.core.plasticity import (
+    STDPState,
+    _trace_step,
+    stdp_step,
+    stdp_step_csr,
+)
 from repro.core.synapses import stp_update
 from repro.kernels.izh_update import izh4_update
 from repro.kernels.ref import izh4_ref
+from repro.kernels.stdp_gather import stdp_gather
 from repro.kernels.stdp_update import stdp_update as stdp_kernel
 from repro.kernels.syn_gather import syn_gather
 from repro.kernels.syn_matmul import syn_matmul
@@ -69,6 +87,7 @@ __all__ = [
     "assemble_packed",
     "update_neurons_dispatch",
     "propagate_packed",
+    "plastic_drive",
     "stdp_dispatch",
 ]
 
@@ -132,6 +151,37 @@ def _gather(static, pre_row: jax.Array, idx: jax.Array, w: jax.Array) -> jax.Arr
     if static.backend == "pallas":
         return syn_gather(pre_row, idx, w, interpret=static.pallas_interpret)
     return (jnp.take(pre_row, idx.astype(jnp.int32), axis=0) * w).sum(axis=1)
+
+
+def plastic_drive(static, params, j: int, spec, w: jax.Array,
+                  pre_row: jax.Array) -> jax.Array:
+    """Fan-in-row drive of a plastic projection: ``[Q] = Σ_k
+    pre_row[idx[q, k]] · w_row[q, k]`` over ``params.proj_csr_idx[j]``.
+
+    Both storages feed the same expression: CSR-stored projections read
+    their ``[Q, F]`` weight rows directly; dense-stored ones gather the
+    rows out of the ``[P, Q]`` rectangle (sentinel-padded table — the
+    appended zero row/slot makes padded terms exact ``+0.0``, matching the
+    CSR 0-pad). Same row values, same ``[Q, F]`` reduce shape → packed
+    (dense storage) and sparse (CSR storage) rasters are bit-identical
+    even after STDP drives the weights off the representable grid.
+
+    Deliberately plain jnp on BOTH backends: the per-synapse terms are
+    identical across storages, so bit-parity only needs a *consistent*
+    reduction — which the pallas ``syn_gather`` kernel cannot provide for
+    off-grid weights (its lane padding reshapes the reduce, and XLA's
+    reduce order is shape-dependent). The kernel stays on the non-plastic
+    buckets, where exactly-representable weights make any order exact.
+    """
+    idx = params.proj_csr_idx[j].astype(jnp.int32)
+    if j in static.csr_projs:
+        rows = w.astype(jnp.float32)  # decoded per tick: weights mutate
+        g = jnp.take(pre_row, idx, axis=0)
+    else:
+        w_ext = jnp.pad(w.astype(jnp.float32), ((0, 1), (0, 0)))
+        rows = w_ext[idx, jnp.arange(spec.post_size)[:, None]]
+        g = jnp.take(jnp.pad(pre_row, (0, 1)), idx, axis=0)
+    return (g * rows).sum(axis=1)
 
 
 def update_neurons_dispatch(static, params, neurons, i_syn):
@@ -242,9 +292,16 @@ def propagate_packed(static, params, state, spikes, ring, t, packed):
              b.delay_ms, b.channel, b.post_start, params.bucket_post_ids[bi])
 
     # 2. per-projection fallback: plastic / STP projections (weights change
-    #    every tick, so they cannot live in the hoisted packed image)
+    #    every tick, so they cannot live in the hoisted packed image).
+    #    Plastic non-STP projections run the fan-in-row drive over their
+    #    compile-time idx table — O(post × fanin) for either storage, and
+    #    the shared row arithmetic is what keeps dense- and CSR-stored
+    #    plastic runs bit-identical. STP projections keep the dense matmul
+    #    (their per-pre u·x scaling rides the spike row either way; CSR
+    #    storage for STP is out of scope).
     new_stp = []
-    for spec, w, stp_state in zip(static.projections, state.weights, state.stp):
+    for j, (spec, w, stp_state) in enumerate(
+            zip(static.projections, state.weights, state.stp)):
         if not (spec.plastic or spec.stp is not None):
             new_stp.append(None)
             continue
@@ -252,7 +309,13 @@ def propagate_packed(static, params, state, spikes, ring, t, packed):
         if stp_state is not None and spec.stp is not None:
             pre_sp = pre_sp * (stp_state.u * stp_state.x)
         channel = 0 if (not coba or spec.receptor == "exc") else 1
-        emit(lambda pre_sp=pre_sp, w=w: _matmul(static, pre_sp, w.astype(f32)),
+        if params.proj_csr_idx[j] is not None:
+            fn = (lambda pre_sp=pre_sp, w=w, j=j, spec=spec:
+                  plastic_drive(static, params, j, spec, w, pre_sp))
+        else:
+            fn = lambda pre_sp=pre_sp, w=w: _matmul(static, pre_sp,
+                                                    w.astype(f32))
+        emit(fn,
              spikes[spec.pre_slice].any() if static.event_gated else None,
              spec.delay_ms, channel, spec.post_start, None)
         if stp_state is not None:
@@ -275,9 +338,33 @@ def propagate_packed(static, params, state, spikes, ring, t, packed):
     return ring, tuple(new_stp)
 
 
-def stdp_dispatch(static, cfg, tr, w, mask, pre_sp, post_sp):
-    """Pair-based STDP step; pallas fuses the two rank-1 updates + clip +
-    mask into one pass over the fp16 weight matrix."""
+def stdp_dispatch(static, cfg, tr, w, mask, pre_sp, post_sp, idx=None):
+    """Pair-based STDP step for either storage layout.
+
+    ``idx is None`` — dense ``[pre, post]`` weights: the pallas backend
+    fuses the two rank-1 updates + clip + mask into one pass over the fp16
+    weight matrix (``kernels.stdp_update``); xla runs ``stdp_step``.
+
+    ``idx`` given — CSR fan-in rows ``[post, fanin]`` (``mask`` is then the
+    validity rows): the pallas backend runs the fused gather-row kernel
+    (``kernels.stdp_gather``), xla the jnp row update ``stdp_step_csr``.
+    Both are pure gather + elementwise, so the two backends — and the
+    dense twin cells — stay bit-identical.
+    """
+    if idx is not None:
+        if static.backend != "pallas" or cfg.tau_elig is not None:
+            return stdp_step_csr(cfg, tr, w, idx, mask, pre_sp, post_sp,
+                                 static.dt)
+        pre_t = _trace_step(tr.pre_trace, pre_sp, cfg.tau_plus, static.dt)
+        post_t = _trace_step(tr.post_trace, post_sp, cfg.tau_minus, static.dt)
+        w2 = stdp_gather(
+            w, idx, mask, pre_t, post_t,
+            pre_sp.astype(jnp.float32), post_sp.astype(jnp.float32),
+            a_plus=cfg.a_plus, a_minus=cfg.a_minus,
+            w_min=cfg.w_min, w_max=cfg.w_max,
+            interpret=static.pallas_interpret,
+        )
+        return STDPState(pre_trace=pre_t, post_trace=post_t), w2
     if static.backend != "pallas" or cfg.tau_elig is not None:
         return stdp_step(cfg, tr, w, mask, pre_sp, post_sp, static.dt)
     pre_t = _trace_step(tr.pre_trace, pre_sp, cfg.tau_plus, static.dt)

@@ -28,9 +28,19 @@ benchmarking (``benchmarks/bench_engine.py``). ``run``/``run_batch``
 pre-draw generator uniforms identically in every mode, so same-seed runs
 are raster-comparable across modes.
 
+Plasticity follows the same storage split: projections in
+``static.plastic_csr`` keep weights / validity mask / DA eligibility as
+``[post, fanin]`` CSR rows and run the gather + elementwise row updates
+(``stdp_step_csr`` and friends, or the fused ``stdp_gather`` Pallas
+kernel); dense-stored plastic projections run the seed outer-product
+updates but share the fan-in-row *drive* (``backend.plastic_drive``) so
+all non-loop modes stay bit-identical.
+
 Throughput batching: :func:`run_batch` vmaps the scan over B independent
 trials (per-trial RNG streams, shared weights) in one device program — the
 packed weight images are decoded once and amortized across the batch.
+Long-horizon runs can bound the generator pre-draw with ``gen_chunk``
+(an outer scan draws uniforms per chunk; see :func:`run`).
 
 Recording (``record=``, a jit-static argument):
 
@@ -64,7 +74,7 @@ from repro.core import neurons as nrn
 from repro.telemetry import monitors as tel
 from repro.core.conductance import coba_current, decay_and_deliver
 from repro.core.network import CompiledNetwork, NetParams, NetState, NetStatic
-from repro.core.plasticity import da_stdp_step
+from repro.core.plasticity import da_stdp_step, da_stdp_step_csr
 from repro.core.synapses import propagate, stp_update
 
 __all__ = ["StepOutput", "step", "run", "run_batch", "Engine"]
@@ -174,22 +184,31 @@ def step(
     else:
         ring, new_stp = _propagate_loop(static, state, spikes, ring, t)
 
-    # 6: plasticity
+    # 6: plasticity. CSR-stored projections (static.plastic_csr) run the
+    # fan-in-row updates — gather + elementwise over [post, fanin], with
+    # `mask` being the validity rows — instead of the dense outer products.
     new_weights, new_stdp = [], []
     da = dopamine if dopamine is not None else jnp.float32(0.0)
-    for spec, cfg, w, tr, mask in zip(
+    for j, (spec, cfg, w, tr, mask) in enumerate(zip(
         static.projections, static.stdp, state.weights, state.stdp, params.masks
-    ):
+    )):
         if cfg is None:
             new_weights.append(w)
             new_stdp.append(None)
             continue
         pre_sp = spikes[spec.pre_slice]
         post_sp = spikes[spec.post_slice]
+        idx = params.proj_csr_idx[j] if j in static.csr_projs else None
         if cfg.tau_elig is not None:
-            tr2, w2 = da_stdp_step(cfg, tr, w, mask, pre_sp, post_sp, da, static.dt)
+            if idx is not None:
+                tr2, w2 = da_stdp_step_csr(cfg, tr, w, idx, mask, pre_sp,
+                                           post_sp, da, static.dt)
+            else:
+                tr2, w2 = da_stdp_step(cfg, tr, w, mask, pre_sp, post_sp, da,
+                                       static.dt)
         else:
-            tr2, w2 = be.stdp_dispatch(static, cfg, tr, w, mask, pre_sp, post_sp)
+            tr2, w2 = be.stdp_dispatch(static, cfg, tr, w, mask, pre_sp,
+                                       post_sp, idx=idx)
         new_weights.append(w2)
         new_stdp.append(tr2)
 
@@ -250,9 +269,22 @@ def _run_impl(
     record: str = "raster",
     record_v: bool = False,
     record_i: bool = False,
+    gen_chunk: int | None = None,
 ):
     if record not in _RECORD_MODES:
         raise ValueError(f"record must be one of {_RECORD_MODES}, got {record!r}")
+    if gen_chunk is not None and gen_chunk < 1:
+        raise ValueError(f"gen_chunk must be >= 1, got {gen_chunk}")
+    # A chunk covering the whole run degenerates to the whole-run draw
+    # (bitwise identical, and the buffer is min(T, gen_chunk) ticks wide
+    # either way — the O(gen_chunk) bound still holds).
+    chunked = (gen_chunk is not None and static.n_gen > 0
+               and gen_chunk < n_steps)
+    if chunked and n_steps % gen_chunk:
+        raise ValueError(
+            f"gen_chunk ({gen_chunk}) must divide n_steps ({n_steps}) — the "
+            "chunked pre-draw scans whole chunks"
+        )
     want_raster = record in ("raster", "both")
     want_mon = record in ("monitors", "both")
     if want_mon and not static.monitors:
@@ -291,11 +323,23 @@ def _run_impl(
     # same RNG stream and their rasters are directly comparable (the
     # cross-mode parity suite asserts bitwise equality on Synfire4).
     # Direct ``step`` calls (gen_u=None) keep the seed per-tick draw.
+    #
+    # ``gen_chunk`` bounds that buffer: instead of one [T, n_gen] draw, an
+    # outer scan draws [gen_chunk, n_gen] per chunk from per-chunk keys
+    # (``jax.random.split(k_draw, T // gen_chunk)``) — the only remaining
+    # O(T·n_gen) allocation of a ``record="monitors"`` run becomes
+    # O(gen_chunk·n_gen), enabling unbounded streaming horizons. KEYING
+    # CHANGE: chunked runs consume a different (equally deterministic)
+    # uniform stream than the whole-run draw — same seed ⇒ same raster at
+    # a fixed chunk size, but chunked vs unchunked (or different chunk
+    # sizes) are different realizations of the same generator statistics.
+    k_draw = None
     if static.n_gen > 0:
         k_draw, k_carry = jax.random.split(state.key)
+        state = state._replace(key=k_carry)
+    if static.n_gen > 0 and not chunked:
         gu_xs = jax.random.uniform(k_draw, (n_steps, static.n_gen),
                                    dtype=jnp.float32)
-        state = state._replace(key=k_carry)
     else:
         gu_xs = jnp.zeros((n_steps, 0), jnp.float32)
 
@@ -323,9 +367,32 @@ def _run_impl(
               tel_ys)
         return (new_state, tel_c), ys
 
-    (final, tel_final), ys = jax.lax.scan(
-        body_wrap, (state, tel0), (ie_xs, da_xs, gu_xs, ix_xs),
-        length=n_steps)
+    if not chunked:
+        (final, tel_final), ys = jax.lax.scan(
+            body_wrap, (state, tel0), (ie_xs, da_xs, gu_xs, ix_xs),
+            length=n_steps)
+    else:
+        n_chunks = n_steps // gen_chunk
+        chunk_keys = jax.random.split(k_draw, n_chunks)
+
+        def resh(x):
+            return x.reshape((n_chunks, gen_chunk) + x.shape[1:])
+
+        def chunk_body(carry, xs):
+            key_c, ie_c, da_c, ix_c = xs
+            gu_c = jax.random.uniform(key_c, (gen_chunk, static.n_gen),
+                                      dtype=jnp.float32)
+            return jax.lax.scan(body_wrap, carry, (ie_c, da_c, gu_c, ix_c),
+                                length=gen_chunk)
+
+        (final, tel_final), ys = jax.lax.scan(
+            chunk_body, (state, tel0),
+            (chunk_keys, resh(ie_xs), resh(da_xs), resh(ix_xs)),
+            length=n_chunks)
+        # Per-tick outputs come back [n_chunks, gen_chunk, ...]; flatten
+        # the chunk axes so every record mode sees the usual [T, ...].
+        ys = jax.tree.map(
+            lambda y: y.reshape((n_steps,) + y.shape[2:]), ys)
     spikes, v, i, tel_ys = ys
     outputs = {}
     if want_raster:
@@ -340,7 +407,7 @@ def _run_impl(
 
 
 @partial(jax.jit, static_argnames=("static", "n_steps", "record", "record_v",
-                                   "record_i"))
+                                   "record_i", "gen_chunk"))
 def run(
     static: NetStatic,
     params: NetParams,
@@ -352,6 +419,7 @@ def run(
     record: str = "raster",
     record_v: bool = False,
     record_i: bool = False,
+    gen_chunk: int | None = None,
 ):
     """Scan ``step`` for ``n_steps`` ticks; returns (state, outputs).
 
@@ -360,14 +428,21 @@ def run(
     model time). ``record="monitors"``: no raster — outputs["telemetry"]
     holds the compiled in-scan monitor accumulators (constant device memory
     in T; see ``repro.telemetry``). ``"both"`` / ``"none"`` as named.
+
+    ``gen_chunk`` (must divide ``n_steps``) draws the generator uniforms
+    per chunk via an outer scan instead of one [T, n_gen] buffer — with
+    ``record="monitors"`` the whole program is then O(gen_chunk) in the
+    horizon. Chunked draws consume a different (still seed-deterministic)
+    RNG stream than the whole-run draw; a chunk >= ``n_steps`` degenerates
+    to the whole-run draw bitwise. See ``_run_impl``.
     """
     return _run_impl(static, params, state, n_steps, i_ext=i_ext,
                      dopamine=dopamine, record=record, record_v=record_v,
-                     record_i=record_i)
+                     record_i=record_i, gen_chunk=gen_chunk)
 
 
 @partial(jax.jit, static_argnames=("static", "n_steps", "batch", "record",
-                                   "record_v", "record_i"))
+                                   "record_v", "record_i", "gen_chunk"))
 def run_batch(
     static: NetStatic,
     params: NetParams,
@@ -378,6 +453,7 @@ def run_batch(
     record: str = "raster",
     record_v: bool = False,
     record_i: bool = False,
+    gen_chunk: int | None = None,
 ):
     """Simulate ``batch`` independent trials in ONE device program.
 
@@ -396,7 +472,8 @@ def run_batch(
         # No vmap for a single trial — keep event gating and the lean
         # non-batched program, just add the leading axis.
         res = _run_impl(static, params, state._replace(key=keys[0]), n_steps,
-                        record=record, record_v=record_v, record_i=record_i)
+                        record=record, record_v=record_v, record_i=record_i,
+                        gen_chunk=gen_chunk)
         return jax.tree.map(lambda x: x[None], res)
 
     # Event gating uses lax.cond on a per-trial predicate; under vmap that
@@ -406,7 +483,8 @@ def run_batch(
 
     def one_trial(key):
         return _run_impl(static_b, params, state._replace(key=key), n_steps,
-                         record=record, record_v=record_v, record_i=record_i)
+                         record=record, record_v=record_v, record_i=record_i,
+                         gen_chunk=gen_chunk)
 
     return jax.vmap(one_trial)(keys)
 

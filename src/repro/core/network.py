@@ -42,6 +42,7 @@ from repro.core.synapses import (
     STPState,
     build_bernoulli,
     build_fixed_fanin,
+    csr_layout,
     dense_to_csr,
     init_stp_state,
 )
@@ -108,16 +109,27 @@ class NetStatic:
     * ``"sparse"`` — every non-plastic/non-STP projection lowers to a CSR
       fan-in gather bucket; its weights are *stored* CSR (``[post, fanin]``
       rows in ``NetState.weights``) so both the memory ledger and the
-      per-tick byte traffic scale with ``n_post × fanin``.
-    * ``"auto"`` — per-projection cost model: a projection goes sparse when
-      the dense image reads ≥ ``_SPARSE_ADVANTAGE ×`` the CSR bytes per
-      tick (see ``_plan_buckets``); the rest pack densely as in "packed".
+      per-tick byte traffic scale with ``n_post × fanin``. **Plastic**
+      (non-STP) projections are forced onto CSR storage too
+      (``plastic_csr``): their weights, validity mask, and DA eligibility
+      all live as fan-in rows, and the engine runs the CSR-native
+      gather + elementwise STDP updates (``repro.core.plasticity``).
+    * ``"auto"`` — per-projection cost model: a projection (plastic or
+      not) goes sparse when the dense path touches ≥
+      ``_SPARSE_ADVANTAGE ×`` the CSR bytes per tick (``_csr_wins``); the
+      rest pack densely as in "packed".
     * ``"loop"`` — the seed per-projection reference path (dense storage),
       kept verbatim as the semantic oracle and benchmark baseline.
 
     All four modes integrate identical dynamics; with exactly-representable
     weights (the Synfire tables) their spike rasters are bit-identical —
     asserted by ``tests/test_sparse.py`` / ``tests/test_backends.py``.
+    Plastic projections stay bit-identical across packed/sparse/auto even
+    as STDP drives their weights off the representable grid: every
+    non-loop mode computes their drive and their weight updates on the
+    same fan-in rows (``NetParams.proj_csr_idx``), so dense storage and
+    CSR storage express the exact same f32 terms in the exact same order
+    (``tests/test_plasticity_sparse.py``).
     """
 
     n: int
@@ -138,6 +150,11 @@ class NetStatic:
     izh4_only: bool = False  # network is IZH4 + generators only (kernel-able)
     event_gated: bool = True  # skip a bucket's matmul when its pres are silent
     buckets: tuple[BucketSpec, ...] = ()
+    # Plastic (non-STP) projections stored as CSR fan-in rows — assigned at
+    # compile time (forced by propagation="sparse", cost-model-picked by
+    # "auto"). They never join buckets (their weights mutate every tick);
+    # the engine's per-projection plasticity/drive paths key off this.
+    plastic_csr: tuple[int, ...] = ()
     # Compiled in-scan monitor specs (repro.telemetry); the engine lowers
     # them into scan-carry accumulators when run(record="monitors"/"both").
     monitors: tuple[telem.MonitorSpec, ...] = ()
@@ -156,10 +173,11 @@ class NetStatic:
     @property
     def csr_projs(self) -> frozenset[int]:
         """Projection indices whose weights are stored CSR ``[post, fanin]``
-        (the members of sparse buckets) rather than dense ``[pre, post]``."""
+        (members of sparse buckets plus ``plastic_csr``) rather than dense
+        ``[pre, post]``."""
         return frozenset(
             m[0] for b in self.buckets if b.kind == "sparse" for m in b.members
-        )
+        ) | frozenset(self.plastic_csr)
 
     def group(self, name: str) -> GroupSpec:
         for g in self.groups:
@@ -174,9 +192,12 @@ class NetStatic:
 
 class NetParams(NamedTuple):
     neuron: nrn.NeuronParams
-    # Per projection [pre, post] bool; None for CSR-stored projections (the
-    # dense mask is never materialized on device — its bytes are replaced by
-    # the CSR index table, which is what the memory ledger accounts).
+    # Per projection: [pre, post] bool for dense-stored projections;
+    # [post, fanin] bool *validity rows* for plastic CSR projections (the
+    # STDP mask in fan-in layout); None for non-plastic CSR projections
+    # (propagation never needs a mask — padding weights are exact zeros —
+    # so the dense bool rectangle is never materialized on device and its
+    # ledger bytes are replaced by the CSR index table).
     masks: tuple[jax.Array | None, ...]
     gen_rate: jax.Array  # [N] Hz during the pulse (0 for non-generators)
     gen_until: jax.Array  # [N] ms pulse end
@@ -189,9 +210,16 @@ class NetParams(NamedTuple):
     # CSR fan-in index tables, aligned with static.buckets (None for dense
     # buckets): idx[b] [Q_b, fanin_b] int16/int32 presynaptic sources, local
     # to the bucket's pre slice. The matching weight rows live in
-    # NetState.weights[proj] (storage dtype; mutable by design even though
-    # sparse projections are non-plastic today).
+    # NetState.weights[proj] (storage dtype).
     bucket_csr_idx: tuple[jax.Array | None, ...] = ()
+    # Per-projection fan-in index tables [post, fanin], aligned with
+    # static.projections; set for every CSR-stored projection (aliasing the
+    # bucket tables for non-plastic members) AND for dense-stored *plastic*
+    # projections in non-loop modes. The latter use a sentinel pad (index
+    # n_pre, one past the pre group — propagation appends an exact-zero
+    # row/slot) instead of the CSR 0-pad, so padded drive terms are exact
+    # +0.0 in both storages and dense↔CSR rasters stay bit-identical.
+    proj_csr_idx: tuple[jax.Array | None, ...] = ()
 
 
 class NetState(NamedTuple):
@@ -362,9 +390,19 @@ class NetworkBuilder:
         buckets, pre_ids, post_ids = _plan_buckets(
             tuple(specs), channels, pack_density, propagation
         )
+        # Plastic (non-STP) projections never join buckets, but their
+        # *storage* flips to CSR fan-in rows when forced ("sparse") or when
+        # the plastic cost model wins ("auto") — weights, validity mask,
+        # and DA eligibility all shrink to [post, fanin].
+        plastic_csr = tuple(sorted(
+            j for j, s in enumerate(specs)
+            if s.plastic and s.stp is None
+            and (propagation == "sparse"
+                 or (propagation == "auto" and _csr_wins(s)))
+        ))
         csr_set = frozenset(
             m[0] for b in buckets if b.kind == "sparse" for m in b.members
-        )
+        ) | frozenset(plastic_csr)
         csr: dict[int, CSRFanin] = {
             j: dense_to_csr(projs[j].mask, projs[j].weight,
                             fanin=specs[j].fanin, storage_dtype=wdt)
@@ -374,8 +412,32 @@ class NetworkBuilder:
             csr[b.members[0][0]].idx if b.kind == "sparse" else None
             for b in buckets
         )
+        # Per-projection fan-in tables: CSR-stored projections alias their
+        # CSR idx; dense-stored plastic projections (packed mode, or auto
+        # deciding dense) get a sentinel-padded table so the engine can run
+        # the same fan-in-row drive/update arithmetic on the dense
+        # rectangle — that shared row order is what keeps plastic runs
+        # bit-identical across propagation modes.
+        proj_csr_idx: list[jax.Array | None] = []
+        for j, s in enumerate(specs):
+            if j in csr_set:
+                proj_csr_idx.append(csr[j].idx)
+            elif s.plastic and s.stp is None and propagation != "loop":
+                # Index geometry only — no quantized weight rows, no device
+                # round-trips (the rows stay in the dense rectangle).
+                idx, valid = csr_layout(projs[j].mask, fanin=s.fanin)
+                sent = np.where(valid, idx, s.pre_size)
+                idt = (np.int16 if s.pre_size <= np.iinfo(np.int16).max
+                       else np.int32)
+                proj_csr_idx.append(jnp.asarray(sent.astype(idt)))
+            else:
+                proj_csr_idx.append(None)
+        # Validity rows go on device only for plastic CSR projections (the
+        # STDP mask); non-plastic CSR builds never pay the transfer.
         masks = tuple(
-            None if j in csr_set else p.mask for j, p in enumerate(projs)
+            jnp.asarray(csr[j].valid) if j in csr_set and p_spec.plastic
+            else (None if j in csr_set else p.mask)
+            for j, (p_spec, p) in enumerate(zip(specs, projs))
         )
         weights = tuple(
             csr[j].weight if j in csr_set else p.weight
@@ -383,8 +445,9 @@ class NetworkBuilder:
         )
         with ledger.stage("3. Conn. Info"):
             ledger.register("masks", tuple(m for m in masks if m is not None))
-            if csr:
-                ledger.register("csr.indices", tuple(c.idx for c in csr.values()))
+            idx_tables = tuple(t for t in proj_csr_idx if t is not None)
+            if idx_tables:
+                ledger.register("csr.indices", idx_tables)
 
         # 4. Syn. State — weights (the fp16 payload; CSR rows for sparse
         # projections), delay ring, STP.
@@ -419,11 +482,15 @@ class NetworkBuilder:
         # accounts the streaming-monitor footprint — O(groups + probes·T),
         # never the O(T·N) raster the `monitor.spikes` hint budgets for.
         stdp_states: list = []
-        for spec, cfg in zip(specs, stdp_cfgs):
+        for j, (spec, cfg) in enumerate(zip(specs, stdp_cfgs)):
             if cfg is None:
                 stdp_states.append(None)
             elif cfg.tau_elig is not None:
-                stdp_states.append(init_da_stdp_state(spec.pre_size, spec.post_size, sdt))
+                # CSR-stored projections carry eligibility on the fan-in
+                # rows — [post, fanin] instead of the [pre, post] rectangle.
+                stdp_states.append(init_da_stdp_state(
+                    spec.pre_size, spec.post_size, sdt,
+                    fanin=spec.fanin if j in csr_set else None))
             else:
                 stdp_states.append(init_stdp_state(spec.pre_size, spec.post_size))
         mon_specs = telem.resolve(monitors, n=n, n_projections=len(specs),
@@ -455,7 +522,7 @@ class NetworkBuilder:
             coba=conductances,
             backend=backend, propagation=propagation,
             pallas_interpret=pallas_interpret, izh4_only=izh4_only,
-            buckets=buckets, monitors=mon_specs,
+            buckets=buckets, plastic_csr=plastic_csr, monitors=mon_specs,
         )
         params = NetParams(
             neuron=neuron_params,
@@ -466,6 +533,7 @@ class NetworkBuilder:
             bucket_pre_ids=pre_ids,
             bucket_post_ids=post_ids,
             bucket_csr_idx=bucket_csr_idx,
+            proj_csr_idx=tuple(proj_csr_idx),
         )
         state0 = NetState(
             t=jnp.int32(0), key=key, neurons=nstate, ring=ring,
@@ -488,9 +556,25 @@ _SPARSE_ADVANTAGE = 4.0
 
 
 def _csr_wins(spec: ProjectionSpec) -> bool:
-    """Cost model: bytes touched per tick, dense matmul vs CSR gather."""
-    dense_bytes = 4 * spec.pre_size * spec.post_size
-    csr_bytes = 8 * spec.post_size * max(spec.fanin, 1)
+    """Cost model: bytes touched per tick, dense vs CSR fan-in layout.
+
+    Non-plastic: dense matmul image read vs CSR index+weight gather.
+    Plastic projections add the STDP traffic to both sides — the dense
+    update rewrites the whole ``[pre, post]`` rectangle (storage-dtype
+    read + write, ~4 B/cell at fp16) plus its bool mask every tick, while
+    the CSR update touches the same ~5 B per *fan-in-row* cell (row
+    read + write + validity byte). Both sides scale by a similar factor,
+    so the flip point stays in the fanin ≪ n_pre regime, but the absolute
+    byte gap — which is what the 8 MB budget feels — grows with the
+    rectangle.
+    """
+    area_dense = spec.pre_size * spec.post_size
+    area_csr = spec.post_size * max(spec.fanin, 1)
+    dense_bytes = 4 * area_dense
+    csr_bytes = 8 * area_csr
+    if spec.plastic:
+        dense_bytes += 5 * area_dense
+        csr_bytes += 5 * area_csr
     return dense_bytes >= _SPARSE_ADVANTAGE * csr_bytes
 
 

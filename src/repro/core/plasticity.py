@@ -4,17 +4,42 @@ Part of CARLsim's "full feature set" the paper ports (STDP, neuromodulation).
 Pair-based STDP with exponential windows is implemented with per-neuron
 pre/post traces; DA-STDP keeps a per-synapse eligibility trace gated by a
 scalar dopamine signal, CARLsim-style.
+
+Every weight-touching op exists in two storage layouts:
+
+* dense ``[n_pre, n_post]`` rectangles (``stdp_step`` / ``da_stdp_step`` /
+  ``homeostasis_step``) — full outer products per tick, the seed layout;
+* CSR fan-in rows ``[n_post, fanin]`` (``stdp_step_csr`` /
+  ``da_stdp_step_csr`` / ``homeostasis_step_csr``) — the per-synapse update
+  ``dw[q, k] = a⁺·pre_trace[idx[q, k]]·post_sp[q] −
+  a⁻·pre_sp[idx[q, k]]·post_trace[q]`` as a gather + elementwise pass,
+  O(n_post·fanin) work and bytes instead of O(n_pre·n_post).
+
+Pair-based STDP is *per-synapse independent*: each weight's update reads
+only its own value, the two per-neuron traces, and the two spike bits. The
+CSR ops therefore express the exact same f32 expression tree per synapse as
+the dense ops (same association, same clip, same storage-dtype cast), so a
+CSR row and its dense twin stay **bit-identical** through any spike history
+— the contract ``tests/test_properties.py`` asserts under hypothesis in
+fp32 and fp16.
+
+All exponential decay factors (``exp(-dt/tau)``) are compile-time Python
+floats (``math.exp``): ``dt`` and every ``tau`` are static configuration,
+so the scan body closes over a baked constant instead of carrying a
+per-trace ``jnp.exp`` op.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["STDPConfig", "STDPState", "stdp_step", "DASTDPState", "da_stdp_step",
-           "HomeostasisConfig", "homeostasis_step"]
+__all__ = ["STDPConfig", "STDPState", "stdp_step", "stdp_step_csr",
+           "DASTDPState", "da_stdp_step", "da_stdp_step_csr",
+           "HomeostasisConfig", "homeostasis_step", "homeostasis_step_csr"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,7 +62,7 @@ class STDPState(NamedTuple):
 class DASTDPState(NamedTuple):
     pre_trace: jax.Array
     post_trace: jax.Array
-    elig: jax.Array  # [n_pre, n_post] eligibility
+    elig: jax.Array  # [n_pre, n_post] dense / [n_post, fanin] CSR
 
 
 def init_stdp_state(n_pre: int, n_post: int) -> STDPState:
@@ -47,16 +72,38 @@ def init_stdp_state(n_pre: int, n_post: int) -> STDPState:
     )
 
 
-def init_da_stdp_state(n_pre: int, n_post: int, dtype=jnp.float32) -> DASTDPState:
+def init_da_stdp_state(n_pre: int, n_post: int, dtype=jnp.float32,
+                       *, fanin: int | None = None) -> DASTDPState:
+    """``fanin`` selects the CSR eligibility layout ``[n_post, fanin]``
+    (rides the fan-in rows); ``None`` keeps the dense ``[n_pre, n_post]``
+    rectangle."""
+    shape = (n_pre, n_post) if fanin is None else (n_post, fanin)
     return DASTDPState(
         pre_trace=jnp.zeros((n_pre,), jnp.float32),
         post_trace=jnp.zeros((n_post,), jnp.float32),
-        elig=jnp.zeros((n_pre, n_post), dtype),
+        elig=jnp.zeros(shape, dtype),
     )
 
 
 def _trace_step(trace: jax.Array, spikes: jax.Array, tau: float, dt: float):
-    return trace * jnp.exp(-dt / tau) + spikes.astype(jnp.float32)
+    # exp(-dt/tau) baked host-side: dt and tau are static config, so the
+    # decay is a Python-float constant in the scan body, not a jnp.exp op.
+    return trace * math.exp(-dt / tau) + spikes.astype(jnp.float32)
+
+
+def _csr_deltas(cfg: STDPConfig, pre_t, post_t, idx, pre_spikes, post_spikes):
+    """LTP/LTD terms on the fan-in rows; per-cell f32 association identical
+    to the dense ``a·outer(·,·)`` path (``a · (pre_term · post_term)``)."""
+    ii = idx.astype(jnp.int32)
+    ltp = cfg.a_plus * (
+        jnp.take(pre_t, ii, axis=0)
+        * post_spikes.astype(jnp.float32)[:, None]
+    )
+    ltd = cfg.a_minus * (
+        jnp.take(pre_spikes.astype(jnp.float32), ii, axis=0)
+        * post_t[:, None]
+    )
+    return ltp, ltd
 
 
 def stdp_step(
@@ -85,6 +132,30 @@ def stdp_step(
     return STDPState(pre_trace=pre_t, post_trace=post_t), w
 
 
+def stdp_step_csr(
+    cfg: STDPConfig,
+    state: STDPState,
+    weight: jax.Array,  # [post, fanin] CSR rows, storage dtype
+    idx: jax.Array,  # [post, fanin] int16/int32 presynaptic sources
+    valid: jax.Array,  # [post, fanin] bool — False on row padding
+    pre_spikes: jax.Array,  # [pre] bool
+    post_spikes: jax.Array,  # [post] bool
+    dt: float = 1.0,
+) -> tuple[STDPState, jax.Array]:
+    """Pair-based STDP on CSR fan-in rows: gather + elementwise,
+    O(n_post·fanin). Bit-identical per synapse to :func:`stdp_step` — the
+    row cell (q, k) computes the exact f32 expression the dense cell
+    (idx[q, k], q) computes; ``valid`` plays the dense mask's role (padded
+    cells would otherwise gather ``pre_trace[0]`` and drift off zero)."""
+    pre_t = _trace_step(state.pre_trace, pre_spikes, cfg.tau_plus, dt)
+    post_t = _trace_step(state.post_trace, post_spikes, cfg.tau_minus, dt)
+    ltp, ltd = _csr_deltas(cfg, pre_t, post_t, idx, pre_spikes, post_spikes)
+    w = weight.astype(jnp.float32)
+    w = jnp.clip(w + ltp - ltd, cfg.w_min, cfg.w_max)
+    w = jnp.where(valid, w, 0.0).astype(weight.dtype)
+    return STDPState(pre_trace=pre_t, post_trace=post_t), w
+
+
 def da_stdp_step(
     cfg: STDPConfig,
     state: DASTDPState,
@@ -103,10 +174,41 @@ def da_stdp_step(
     ltp = cfg.a_plus * jnp.outer(pre_t, post_spikes.astype(jnp.float32))
     ltd = cfg.a_minus * jnp.outer(pre_spikes.astype(jnp.float32), post_t)
     elig = state.elig.astype(jnp.float32)
-    elig = elig * jnp.exp(-dt / cfg.tau_elig) + (ltp - ltd)
+    elig = elig * math.exp(-dt / cfg.tau_elig) + (ltp - ltd)
     w = weight.astype(jnp.float32) + dopamine * elig
     w = jnp.clip(w, cfg.w_min, cfg.w_max)
     w = jnp.where(mask, w, 0.0).astype(weight.dtype)
+    new = DASTDPState(pre_trace=pre_t, post_trace=post_t,
+                      elig=elig.astype(state.elig.dtype))
+    return new, w
+
+
+def da_stdp_step_csr(
+    cfg: STDPConfig,
+    state: DASTDPState,  # elig [post, fanin]
+    weight: jax.Array,  # [post, fanin] CSR rows
+    idx: jax.Array,  # [post, fanin]
+    valid: jax.Array,  # [post, fanin] bool
+    pre_spikes: jax.Array,
+    post_spikes: jax.Array,
+    dopamine: jax.Array,
+    dt: float = 1.0,
+) -> tuple[DASTDPState, jax.Array]:
+    """DA-STDP on CSR fan-in rows: the eligibility trace shrinks from the
+    dense ``[n_pre, n_post]`` rectangle to ``[n_post, fanin]`` — for the
+    paper's fanin ≪ n_pre workloads this is where DA-modulated learning
+    stops dominating the memory ledger. Synapse cells evolve bit-identically
+    to :func:`da_stdp_step` (padded cells accumulate junk eligibility, as
+    masked-out dense cells do, and are zeroed in the weight by ``valid``)."""
+    assert cfg.tau_elig is not None, "da_stdp_step_csr requires tau_elig"
+    pre_t = _trace_step(state.pre_trace, pre_spikes, cfg.tau_plus, dt)
+    post_t = _trace_step(state.post_trace, post_spikes, cfg.tau_minus, dt)
+    ltp, ltd = _csr_deltas(cfg, pre_t, post_t, idx, pre_spikes, post_spikes)
+    elig = state.elig.astype(jnp.float32)
+    elig = elig * math.exp(-dt / cfg.tau_elig) + (ltp - ltd)
+    w = weight.astype(jnp.float32) + dopamine * elig
+    w = jnp.clip(w, cfg.w_min, cfg.w_max)
+    w = jnp.where(valid, w, 0.0).astype(weight.dtype)
     new = DASTDPState(pre_trace=pre_t, post_trace=post_t,
                       elig=elig.astype(state.elig.dtype))
     return new, w
@@ -124,6 +226,18 @@ class HomeostasisConfig:
     beta: float = 0.1  # scaling strength per second
 
 
+def _homeostasis_scale(cfg: HomeostasisConfig, avg_rate, post_spikes, dt):
+    """(new avg rate, per-post scale) shared by both storage layouts."""
+    decay = math.exp(-dt / cfg.tau_avg_ms)  # compile-time constant
+    inst = post_spikes.astype(jnp.float32) * (1000.0 / dt)  # Hz this tick
+    new_avg = avg_rate * decay + inst * (1.0 - decay)
+    err = (cfg.target_hz - new_avg) / jnp.maximum(cfg.target_hz, 1e-6)
+    # per-tick scale clamped: large rate errors must not flip the sign or
+    # blow up the multiplicative update (stability guard).
+    scale = jnp.clip(1.0 + cfg.beta * err * (dt / 1000.0), 0.5, 1.5)
+    return new_avg, scale
+
+
 def homeostasis_step(
     cfg: HomeostasisConfig,
     avg_rate: jax.Array,  # [n_post] running average rate (Hz)
@@ -134,12 +248,22 @@ def homeostasis_step(
     """Returns (new avg_rate, scaled weight). Incoming weights of a neuron
     firing above target shrink multiplicatively; below target they grow —
     the classic synaptic-scaling stabilizer on top of STDP."""
-    decay = jnp.exp(-dt / cfg.tau_avg_ms)
-    inst = post_spikes.astype(jnp.float32) * (1000.0 / dt)  # Hz this tick
-    new_avg = avg_rate * decay + inst * (1.0 - decay)
-    err = (cfg.target_hz - new_avg) / jnp.maximum(cfg.target_hz, 1e-6)
-    # per-tick scale clamped: large rate errors must not flip the sign or
-    # blow up the multiplicative update (stability guard).
-    scale = jnp.clip(1.0 + cfg.beta * err * (dt / 1000.0), 0.5, 1.5)
+    new_avg, scale = _homeostasis_scale(cfg, avg_rate, post_spikes, dt)
     w = (weight.astype(jnp.float32) * scale[None, :]).astype(weight.dtype)
+    return new_avg, w
+
+
+def homeostasis_step_csr(
+    cfg: HomeostasisConfig,
+    avg_rate: jax.Array,  # [n_post]
+    weight: jax.Array,  # [post, fanin] CSR rows
+    post_spikes: jax.Array,  # [post] bool
+    dt: float = 1.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Homeostatic scaling on CSR fan-in rows. A dense column (all inputs
+    of post neuron q) is a CSR *row*, so the per-post scale broadcasts over
+    the fan-in axis — same per-synapse product as :func:`homeostasis_step`,
+    O(n_post·fanin) traffic, padding stays exactly 0 (0 · scale)."""
+    new_avg, scale = _homeostasis_scale(cfg, avg_rate, post_spikes, dt)
+    w = (weight.astype(jnp.float32) * scale[:, None]).astype(weight.dtype)
     return new_avg, w

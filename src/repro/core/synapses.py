@@ -28,6 +28,8 @@ __all__ = [
     "STPConfig",
     "STPState",
     "build_fixed_fanin",
+    "csr_layout",
+    "csr_to_dense",
     "dense_to_csr",
     "propagate",
     "stp_update",
@@ -156,10 +158,43 @@ class CSRFanin(NamedTuple):
     Pallas kernel) treats padding as bitwise neutral. ``idx`` uses int16
     when the pre group fits (halving index bytes against the paper's
     8 MB budget), int32 otherwise.
+
+    ``valid[q, k]`` marks real synapses vs row padding. Propagation never
+    needs it (padding weights are exact zeros), but *plastic* CSR rows do:
+    STDP would otherwise grow the padded cells (their Δw gathers
+    ``pre_trace[0]``), so the CSR weight updates mask with ``valid``
+    exactly where the dense updates mask with the ``[pre, post]`` bool
+    mask. :func:`dense_to_csr` returns it as host-side numpy — only
+    plastic projections put it on device (``network.compile`` converts
+    the rows it keeps as ``NetParams.masks``); non-plastic builds never
+    pay the transfer.
     """
 
     idx: jax.Array  # [post, fanin] int16/int32
     weight: jax.Array  # [post, fanin] storage dtype
+    valid: jax.Array | np.ndarray  # [post, fanin] bool — False on padding
+
+
+def csr_layout(
+    mask: np.ndarray | jax.Array, *, fanin: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side CSR fan-in layout of a dense bool mask: ``(idx, valid)``
+    numpy arrays, both ``[post, fanin]``, ascending pre index per row
+    (a stable argsort over ``~mask`` floats the True entries to the front
+    of each column in index order, so CSR reduction order matches the
+    dense matmul's index order), ``idx = 0`` on padding.
+
+    Shared by :func:`dense_to_csr` and the compile-time sentinel tables of
+    dense-stored plastic projections (``network.compile``) — the latter
+    needs only the index geometry, never the quantized weight rows.
+    """
+    m = np.asarray(mask)
+    counts = m.sum(axis=0)
+    f = int(counts.max()) if fanin is None else fanin
+    order = np.argsort(~m, axis=0, kind="stable")[:f]  # [f, post]
+    valid = np.arange(f)[:, None] < counts[None, :]  # [f, post]
+    idx = np.where(valid, order, 0).T  # [post, f]
+    return idx, np.ascontiguousarray(valid.T)
 
 
 def dense_to_csr(
@@ -171,21 +206,13 @@ def dense_to_csr(
 ) -> CSRFanin:
     """Convert a dense ``[pre, post]`` (mask, weight) pair to CSR fan-in.
 
-    Host-side numpy (compile time only). The per-row source order is
-    ascending pre index — a stable argsort over ``~mask`` floats the True
-    entries to the front of each column in index order, so the CSR
-    reduction order matches the dense matmul's index order.
+    Host-side numpy (compile time only); row order per :func:`csr_layout`.
     """
     m = np.asarray(mask)
     w = np.asarray(weight, np.float32)
-    n_pre, n_post = m.shape
-    counts = m.sum(axis=0)
-    f = int(counts.max()) if fanin is None else fanin
-    # True-first stable sort per column -> ascending source ids per row.
-    order = np.argsort(~m, axis=0, kind="stable")[:f]  # [f, post]
-    valid = np.arange(f)[:, None] < counts[None, :]  # [f, post]
-    idx = np.where(valid, order, 0).T  # [post, f]
-    wq = np.where(valid, np.take_along_axis(w, order, axis=0), 0.0).T
+    n_pre = m.shape[0]
+    idx, valid = csr_layout(m, fanin=fanin)
+    wq = np.where(valid, np.take_along_axis(w.T, idx, axis=1), 0.0)
     idx_dtype = np.int16 if n_pre <= np.iinfo(np.int16).max else np.int32
     if storage_dtype is None:
         src = np.asarray(weight).dtype
@@ -193,7 +220,24 @@ def dense_to_csr(
     return CSRFanin(
         idx=jnp.asarray(idx.astype(idx_dtype)),
         weight=jnp.asarray(wq, storage_dtype),
+        valid=valid,
     )
+
+
+def csr_to_dense(csr: CSRFanin, n_pre: int) -> np.ndarray:
+    """Scatter CSR fan-in rows back to the dense ``[pre, post]`` f32 image.
+
+    Host-side (numpy); the inverse of :func:`dense_to_csr` up to the exact
+    zeros on padded cells. Used by the parity suites to compare plastic
+    CSR weights against their dense twins bit-for-bit."""
+    idx = np.asarray(csr.idx)
+    w = np.asarray(csr.weight, np.float32)
+    valid = np.asarray(csr.valid)
+    n_post, fanin = idx.shape
+    out = np.zeros((n_pre, n_post), np.float32)
+    cols = np.broadcast_to(np.arange(n_post)[:, None], (n_post, fanin))
+    out[idx[valid], cols[valid]] = w[valid]
+    return out
 
 
 def propagate(

@@ -81,3 +81,21 @@ def stdp_update_ref(w, mask, pre_trace, post_trace, pre_spikes, post_spikes,
     ltd = a_minus * jnp.outer(pre_spikes.astype(jnp.float32), post_trace)
     wf = jnp.clip(wf + ltp - ltd, w_min, w_max)
     return jnp.where(mask, wf, 0.0).astype(w.dtype)
+
+
+def stdp_gather_ref(w, idx, valid, pre_trace, post_trace, pre_spikes,
+                    post_spikes, *, a_plus: float, a_minus: float,
+                    w_min: float, w_max: float):
+    """Pair-based STDP on CSR fan-in rows (``w``/``idx``/``valid``
+    [Q, F]): ``dw[q, k] = a⁺·pre_t[idx[q, k]]·post_s[q] −
+    a⁻·pre_s[idx[q, k]]·post_t[q]`` — pure gather + elementwise, so the
+    kernel must match **bit-for-bit** (no reduction-order freedom). Same
+    contract as :func:`repro.kernels.stdp_gather.stdp_gather`."""
+    ii = idx.astype(jnp.int32)
+    wf = w.astype(jnp.float32)
+    post_s = post_spikes.astype(jnp.float32)[:, None]
+    ltp = a_plus * (jnp.take(pre_trace.astype(jnp.float32), ii, axis=0) * post_s)
+    ltd = a_minus * (jnp.take(pre_spikes.astype(jnp.float32), ii, axis=0)
+                     * post_trace.astype(jnp.float32)[:, None])
+    wf = jnp.clip(wf + ltp - ltd, w_min, w_max)
+    return jnp.where(valid, wf, 0.0).astype(w.dtype)

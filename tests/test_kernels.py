@@ -11,6 +11,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_attn import flash_attention
 from repro.kernels.izh_update import izh4_update
+from repro.kernels.stdp_gather import stdp_gather
 from repro.kernels.stdp_update import stdp_update
 from repro.kernels.syn_gather import syn_gather
 from repro.kernels.syn_matmul import syn_matmul
@@ -234,6 +235,103 @@ class TestSTDPKernel:
         np.testing.assert_allclose(np.asarray(out, np.float32),
                                    np.asarray(want, np.float32),
                                    rtol=1e-3, atol=1e-3)
+
+
+class TestSTDPGatherKernel:
+    """Fused CSR-row STDP vs the jnp oracle. Every op is elementwise per
+    row cell (the gathers read, never reduce), so the kernel must match
+    the oracle — and hence the dense STDP at the twin cells —
+    **bit-for-bit**, not just allclose."""
+
+    def _case(self, seed, p, q, f, wdtype, ragged=True):
+        rng = np.random.default_rng(seed)
+        idx = np.sort(rng.integers(0, p, (q, f)), axis=1)
+        valid = np.ones((q, f), bool)
+        if ragged:
+            lens = rng.integers(0, f + 1, q)
+            valid = np.arange(f)[None, :] < lens[:, None]
+            idx = np.where(valid, idx, 0)
+        w = np.where(valid, rng.normal(1.0, 0.4, (q, f)), 0.0)
+        return (jnp.asarray(w, wdtype), jnp.asarray(idx, jnp.int32),
+                jnp.asarray(valid),
+                jnp.asarray(rng.random(p).astype(np.float32) * 2),
+                jnp.asarray(rng.random(q).astype(np.float32) * 2),
+                jnp.asarray((rng.random(p) < 0.2).astype(np.float32)),
+                jnp.asarray((rng.random(q) < 0.2).astype(np.float32)))
+
+    KW = dict(a_plus=0.01, a_minus=0.012, w_min=0.0, w_max=5.0)
+
+    @pytest.mark.parametrize("pqf", [
+        (200, 200, 60),    # Synfire4-scale plastic projection
+        (2000, 2000, 90),  # Synfire4x10-scale (fanin << n_pre)
+        (50, 300, 7),      # fan-in narrower than a lane
+        (130, 257, 129),   # everything ragged vs the 128 padding
+        (40, 10, 15),      # fan-in wider than the post group
+    ])
+    @pytest.mark.parametrize("wdtype", [jnp.float16, jnp.float32])
+    def test_matches_ref_bitwise(self, pqf, wdtype):
+        import functools
+        p, q, f = pqf
+        args = self._case(0, p, q, f, wdtype)
+        out = stdp_gather(*args, interpret=I, **self.KW)
+        # jit the oracle: the engine always runs it jitted, and XLA's FMA
+        # contraction of mul+add differs between eager op-by-op dispatch
+        # and a compiled program — jitted-vs-kernel is the real contract.
+        want = jax.jit(functools.partial(ref.stdp_gather_ref,
+                                         **self.KW))(*args)
+        assert out.shape == (q, f) and out.dtype == wdtype
+        np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                      np.asarray(want, np.float32))
+
+    @pytest.mark.parametrize("wdtype", [jnp.float16, jnp.float32])
+    def test_padding_rows_stay_exact_zero(self, wdtype):
+        # Padded cells (valid=False) gather pre_trace[0] for their Δw but
+        # the validity mask must pin them at exact 0 — otherwise CSR rows
+        # drift from their dense twins.
+        w, idx, valid, pre_t, post_t, pre_s, post_s = self._case(
+            3, 64, 32, 9, wdtype, ragged=True)
+        pre_t = pre_t.at[0].set(7.5)  # make a leak visible
+        post_s = jnp.ones_like(post_s)
+        out = np.asarray(stdp_gather(w, idx, valid, pre_t, post_t, pre_s,
+                                     post_s, interpret=I, **self.KW),
+                         np.float32)
+        assert np.all(out[~np.asarray(valid)] == 0.0)
+
+    def test_matches_dense_stdp_kernel_at_twin_cells(self):
+        # The same synapses through the dense outer-product kernel and the
+        # CSR gather kernel end at identical weights.
+        from repro.core.synapses import dense_to_csr
+        rng = np.random.default_rng(5)
+        mask = rng.random((120, 80)) < 0.2
+        mask[0, :] = True
+        w = np.where(mask, rng.normal(2.0, 0.3, (120, 80)), 0.0).astype(np.float32)
+        csr = dense_to_csr(mask, w)
+        pre_t = jnp.asarray(rng.random(120).astype(np.float32))
+        post_t = jnp.asarray(rng.random(80).astype(np.float32))
+        pre_s = jnp.asarray((rng.random(120) < 0.3).astype(np.float32))
+        post_s = jnp.asarray((rng.random(80) < 0.3).astype(np.float32))
+        dense = np.asarray(stdp_update(jnp.asarray(w), jnp.asarray(mask),
+                                       pre_t, post_t, pre_s, post_s,
+                                       interpret=I, **self.KW))
+        rows = np.asarray(stdp_gather(csr.weight, csr.idx, csr.valid,
+                                      pre_t, post_t, pre_s, post_s,
+                                      interpret=I, **self.KW))
+        idx = np.asarray(csr.idx)
+        valid = np.asarray(csr.valid)
+        cols = np.broadcast_to(np.arange(80)[:, None], idx.shape)
+        np.testing.assert_array_equal(dense[idx[valid], cols[valid]],
+                                      rows[valid])
+
+    def test_empty_fanin_passthrough(self):
+        w = jnp.zeros((4, 0), jnp.float16)
+        out = stdp_gather(w, jnp.zeros((4, 0), jnp.int32),
+                          jnp.zeros((4, 0), bool),
+                          jnp.ones((10,), jnp.float32),
+                          jnp.ones((4,), jnp.float32),
+                          jnp.zeros((10,), jnp.float32),
+                          jnp.zeros((4,), jnp.float32),
+                          interpret=I, **self.KW)
+        assert out.shape == (4, 0)
 
 
 class TestFlashAttentionStress:

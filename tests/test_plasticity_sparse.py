@@ -1,0 +1,292 @@
+"""Sparse (CSR fan-in) plasticity: layout, cost model, parity, ledger.
+
+Mirror of ``tests/test_sparse.py`` for *plastic* projections. The CSR
+plasticity path must be a pure storage/execution change: per-synapse STDP
+updates are independent, and every non-loop propagation mode computes the
+plastic drive and the weight updates on the same fan-in rows — so dense-
+and CSR-stored plastic runs must produce **bit-identical** weights and
+rasters in fp32 and fp16, even after STDP drives weights off the
+exactly-representable grid.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Engine, NetworkBuilder, STDPConfig, STPConfig, izh4, run
+from repro.core.network import _csr_wins
+from repro.core.plasticity import init_da_stdp_state
+from repro.core.synapses import CSRFanin, ProjectionSpec, csr_to_dense, dense_to_csr
+
+TICKS = 250
+
+
+def _stdp_cfg(**kw):
+    kw.setdefault("a_plus", 0.01)
+    kw.setdefault("a_minus", 0.002)
+    kw.setdefault("w_max", 6.0)
+    return STDPConfig(**kw)
+
+
+def _plastic_net(propagation, policy="fp16", backend="xla", da=False,
+                 seed=5):
+    net = NetworkBuilder(seed=seed)
+    net.add_spike_generator("pre", 30, rate_hz=80.0)
+    net.add_group("post", izh4(10, a=0.02, b=0.2, c=-65.0, d=8.0))
+    net.connect("pre", "post", fanin=15, weight=3.0, delay_ms=1,
+                stdp=_stdp_cfg(tau_elig=200.0 if da else None),
+                da_modulated=da)
+    return net.compile(policy=policy, propagation=propagation,
+                       backend=backend)
+
+
+def _as_dense(c, weights, j=0):
+    """Weights of projection ``j`` as a dense f32 image, whatever the
+    storage layout (CSR rows are scattered through the idx table)."""
+    spec = c.static.projections[j]
+    if j in c.static.csr_projs:
+        return csr_to_dense(
+            CSRFanin(c.params.proj_csr_idx[j], weights[j], c.params.masks[j]),
+            spec.pre_size)
+    return np.asarray(weights[j], np.float32)
+
+
+class TestPlasticCSRLayout:
+    def test_sparse_forces_plastic_to_csr_storage(self):
+        c = _plastic_net("sparse")
+        assert c.static.plastic_csr == (0,)
+        assert 0 in c.static.csr_projs
+        spec = c.static.projections[0]
+        assert c.state0.weights[0].shape == (spec.post_size, spec.fanin)
+        assert c.params.masks[0].shape == (spec.post_size, spec.fanin)
+        assert c.params.masks[0].dtype == jnp.bool_
+        assert c.params.proj_csr_idx[0].shape == (spec.post_size, spec.fanin)
+
+    def test_packed_keeps_dense_storage_but_builds_fanin_table(self):
+        c = _plastic_net("packed")
+        assert c.static.plastic_csr == ()
+        assert c.static.csr_projs == frozenset()
+        assert c.state0.weights[0].shape == (30, 10)
+        assert c.params.masks[0].shape == (30, 10)
+        # fan-in gather table present (the shared row arithmetic), with the
+        # sentinel pad (index == n_pre) on invalid cells.
+        idx = np.asarray(c.params.proj_csr_idx[0])
+        assert idx.shape[0] == 10
+        counts = np.asarray(c.params.masks[0]).sum(axis=0)
+        for q in range(10):
+            assert np.all(idx[q, counts[q]:] == 30), "sentinel pad missing"
+
+    def test_loop_mode_builds_no_tables(self):
+        c = _plastic_net("loop")
+        assert all(t is None for t in c.params.proj_csr_idx)
+
+    def test_valid_rows_match_dense_mask(self):
+        rng = np.random.default_rng(0)
+        mask = rng.random((40, 25)) < 0.3
+        w = np.where(mask, 1.5, 0.0).astype(np.float32)
+        csr = dense_to_csr(mask, w)
+        valid = np.asarray(csr.valid)
+        counts = mask.sum(axis=0)
+        assert valid.sum() == mask.sum()
+        for q in range(25):
+            assert valid[q, :counts[q]].all() and not valid[q, counts[q]:].any()
+
+    def test_csr_to_dense_roundtrip(self):
+        rng = np.random.default_rng(3)
+        mask = rng.random((50, 30)) < 0.25
+        w = np.where(mask, rng.normal(1.0, 0.4, (50, 30)), 0.0).astype(np.float32)
+        back = csr_to_dense(dense_to_csr(mask, w), 50)
+        np.testing.assert_array_equal(back, w)
+
+    def test_da_eligibility_rides_fanin_rows(self):
+        c = _plastic_net("sparse", da=True)
+        spec = c.static.projections[0]
+        assert c.state0.stdp[0].elig.shape == (spec.post_size, spec.fanin)
+        dense = _plastic_net("packed", da=True)
+        assert dense.state0.stdp[0].elig.shape == (30, 10)
+
+    def test_init_da_stdp_state_fanin_kwarg(self):
+        st = init_da_stdp_state(100, 20, jnp.float16, fanin=7)
+        assert st.elig.shape == (20, 7) and st.elig.dtype == jnp.float16
+        assert st.pre_trace.shape == (100,) and st.post_trace.shape == (20,)
+
+
+class TestPlasticCostModel:
+    def _spec(self, pre, post, fanin, **kw):
+        return ProjectionSpec(name="t", pre_start=0, pre_size=pre,
+                              post_start=pre, post_size=post, delay_ms=1,
+                              receptor="exc", fanin=fanin,
+                              n_syn=post * fanin, **kw)
+
+    def test_plastic_small_projection_stays_dense(self):
+        assert not _csr_wins(self._spec(200, 200, 60, plastic=True))
+
+    def test_plastic_large_sparse_fanin_goes_sparse(self):
+        assert _csr_wins(self._spec(2000, 2000, 60, plastic=True))
+
+    def test_auto_assigns_plastic_storage_per_projection(self):
+        net = NetworkBuilder(seed=1)
+        net.add_spike_generator("g", 600, rate_hz=40.0)
+        net.add_group("a", izh4(600, a=0.02, b=0.2, c=-65.0, d=8.0))
+        net.add_group("b", izh4(20, a=0.02, b=0.2, c=-65.0, d=8.0))
+        # 600x600 @ fanin 12: huge byte advantage -> CSR
+        net.connect("g", "a", fanin=12, weight=1.0, delay_ms=2,
+                    stdp=_stdp_cfg())
+        # 600x20 @ fanin 300: half-dense rows -> stays dense
+        net.connect("a", "b", fanin=300, weight=0.1, delay_ms=1,
+                    stdp=_stdp_cfg())
+        c = net.compile(policy="fp16", propagation="auto")
+        assert c.static.plastic_csr == (0,)
+        assert c.state0.weights[0].shape == (600, 12)
+        assert c.state0.weights[1].shape == (600, 20)
+
+    def test_stp_projection_excluded_from_csr(self):
+        net = NetworkBuilder(seed=2)
+        net.add_spike_generator("g", 50, rate_hz=100.0)
+        net.add_group("n", izh4(20, a=0.02, b=0.2, c=-65.0, d=8.0))
+        net.connect("g", "n", fanin=10, weight=0.5, delay_ms=1,
+                    stdp=_stdp_cfg(), stp=STPConfig())
+        c = net.compile(policy="fp16", propagation="sparse")
+        assert c.static.plastic_csr == ()
+        assert c.state0.weights[0].shape == (50, 20)
+        assert c.params.proj_csr_idx[0] is None  # matmul fallback
+
+
+class TestPlasticEngineParity:
+    """Dense ↔ CSR plastic runs must match bit-for-bit: same fan-in row
+    terms, same order, in every non-loop mode × backend × policy."""
+
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    def test_modes_bitwise_identical(self, policy):
+        res = {}
+        for prop in ("packed", "sparse", "auto"):
+            c = _plastic_net(prop, policy)
+            final, out = run(c.static, c.params, c.state0, TICKS)
+            res[prop] = (np.asarray(out["spikes"]),
+                         _as_dense(c, final.weights))
+        assert res["packed"][0].sum() > 100, "degenerate run"
+        for prop in ("sparse", "auto"):
+            assert np.array_equal(res["packed"][0], res[prop][0]), prop
+            np.testing.assert_array_equal(res["packed"][1], res[prop][1])
+        # learning actually happened
+        c0 = _plastic_net("sparse", policy)
+        w0 = _as_dense(c0, c0.state0.weights)
+        assert res["sparse"][1].sum() != w0.sum()
+
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    def test_pallas_stdp_gather_matches_xla_bitwise(self, policy):
+        res = {}
+        for backend in ("xla", "pallas"):
+            c = _plastic_net("sparse", policy, backend)
+            final, out = run(c.static, c.params, c.state0, TICKS)
+            res[backend] = (np.asarray(out["spikes"]),
+                            np.asarray(final.weights[0], np.float32))
+        assert res["xla"][0].sum() > 100
+        assert np.array_equal(res["xla"][0], res["pallas"][0])
+        np.testing.assert_array_equal(res["xla"][1], res["pallas"][1])
+
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    def test_da_stdp_modes_bitwise_identical(self, policy):
+        da = jnp.full((TICKS,), 0.8, jnp.float32)
+        res = {}
+        for prop in ("packed", "sparse"):
+            c = _plastic_net(prop, policy, da=True)
+            final, out = run(c.static, c.params, c.state0, TICKS, dopamine=da)
+            res[prop] = (np.asarray(out["spikes"]),
+                         _as_dense(c, final.weights))
+        assert res["packed"][0].sum() > 100
+        assert np.array_equal(res["packed"][0], res["sparse"][0])
+        np.testing.assert_array_equal(res["packed"][1], res["sparse"][1])
+
+    def test_event_gating_neutral_on_plastic_sparse(self):
+        c = _plastic_net("sparse", "fp16")
+        ungated = dataclasses.replace(c.static, event_gated=False)
+        _, o1 = run(c.static, c.params, c.state0, TICKS)
+        _, o2 = run(ungated, c.params, c.state0, TICKS)
+        assert np.array_equal(np.asarray(o1["spikes"]),
+                              np.asarray(o2["spikes"]))
+
+    def test_run_batch_plastic_sparse(self):
+        c = _plastic_net("sparse", "fp16")
+        _, out = Engine(c).run_batch(100, 4)
+        sp = np.asarray(out["spikes"])
+        assert sp.shape == (4, 100, 40)
+        assert sp.sum() > 50
+        _, out2 = Engine(_plastic_net("packed", "fp16")).run_batch(100, 4)
+        assert np.array_equal(sp, np.asarray(out2["spikes"]))
+
+    def test_inhibitory_plastic_projection_routes_correctly(self):
+        """A plastic *inhibitory* projection must land its (negative) drive
+        in the same ring slots under both storages."""
+        def build(prop):
+            net = NetworkBuilder(seed=11)
+            net.add_spike_generator("g", 40, rate_hz=120.0)
+            net.add_group("e", izh4(20, a=0.02, b=0.2, c=-65.0, d=8.0))
+            net.add_group("i", izh4(10, a=0.1, b=0.2, c=-65.0, d=2.0))
+            net.connect("g", "e", fanin=10, weight=2.0, delay_ms=1)
+            net.connect("g", "i", fanin=10, weight=2.5, delay_ms=1)
+            net.connect("i", "e", fanin=4, weight=-1.5, delay_ms=2,
+                        stdp=_stdp_cfg(w_min=-4.0, w_max=0.0,
+                                       a_plus=0.002, a_minus=0.01))
+            return net.compile(policy="fp32", propagation=prop)
+
+        res = {}
+        for prop in ("packed", "sparse"):
+            c = build(prop)
+            final, out = run(c.static, c.params, c.state0, 200)
+            res[prop] = (np.asarray(out["spikes"]),
+                         _as_dense(c, final.weights, j=2))
+        assert res["packed"][0].sum() > 50
+        assert np.array_equal(res["packed"][0], res["sparse"][0])
+        np.testing.assert_array_equal(res["packed"][1], res["sparse"][1])
+
+
+class TestPlasticLedger:
+    def _net(self, propagation, da=False):
+        net = NetworkBuilder(seed=7)
+        net.add_spike_generator("g", 600, rate_hz=40.0)
+        net.add_group("a", izh4(600, a=0.02, b=0.2, c=-65.0, d=8.0))
+        net.connect("g", "a", fanin=12, weight=1.0, delay_ms=2,
+                    stdp=_stdp_cfg(tau_elig=100.0 if da else None),
+                    da_modulated=da)
+        return net.compile(policy="fp16", propagation=propagation)
+
+    def test_csr_plastic_bytes_replace_dense_bytes(self):
+        dense = self._net("packed").ledger
+        sparse = self._net("sparse").ledger
+        assert sparse.synapse_bytes() < dense.synapse_bytes() / 10
+        nb = sparse.name_bytes()
+        # weights + validity rows [600, 12] fp16/bool, idx [600, 12] int16
+        assert nb["weights"] == 600 * 12 * 2
+        assert nb["masks"] == 600 * 12
+        assert nb["csr.indices"] == 600 * 12 * 2
+
+    def test_dense_plastic_registers_gather_table(self):
+        nb = self._net("packed").ledger.name_bytes()
+        # packed keeps the dense rectangle + mask but now also carries the
+        # sentinel fan-in table the shared row drive gathers through
+        assert nb["masks"] == 600 * 600
+        assert nb["csr.indices"] == 600 * 12 * 2
+
+    def test_da_eligibility_bytes_shrink(self):
+        from repro.precision.policy import tree_bytes
+
+        dense = self._net("packed", da=True)
+        sparse = self._net("sparse", da=True)
+        eb_dense = tree_bytes(dense.state0.stdp[0].elig)
+        eb_sparse = tree_bytes(sparse.state0.stdp[0].elig)
+        assert eb_dense == 600 * 600 * 2
+        assert eb_sparse == 600 * 12 * 2
+        assert eb_sparse * 10 < eb_dense
+
+    @pytest.mark.slow
+    def test_plastic_x10_fits_mcu_budget(self):
+        from repro.configs.synfire4 import SYNFIRE4_X10, CHAIN_STDP, build_synfire
+        from repro.memory import MCU_BUDGET_BYTES
+
+        net = build_synfire(SYNFIRE4_X10, policy="fp16",
+                            propagation="sparse", stdp_chain=CHAIN_STDP,
+                            budget=MCU_BUDGET_BYTES, monitor_ms_hint=0)
+        assert len(net.static.plastic_csr) == 4  # the exc->exc chain
+        assert net.ledger.total_used <= MCU_BUDGET_BYTES

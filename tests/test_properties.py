@@ -140,6 +140,114 @@ class TestSparseEquivalence:
                                       np.asarray(o2["spikes"]))
 
 
+class TestPlasticSparseEquivalence:
+    """CSR↔dense plasticity equivalence (the sparse plasticity contract).
+
+    Pair-based STDP, DA-STDP, and homeostatic scaling are per-synapse
+    independent — the CSR row cell (q, k) and the dense cell (idx[q, k], q)
+    compute the same f32 expression — so the scattered CSR rows must equal
+    the dense update **bit-for-bit**, in fp32 AND fp16 storage (the final
+    cast is per-element, so exactness survives the fp16 round-trip)."""
+
+    def _instance(self, seed, p, q, density, wdtype):
+        rng = np.random.default_rng(seed)
+        mask = rng.random((p, q)) < density
+        mask[rng.integers(0, p), :] = True  # no empty columns
+        w = np.where(mask, rng.normal(1.5, 0.5, (p, q)), 0.0).astype(np.float32)
+        from repro.core.synapses import dense_to_csr
+        csr = dense_to_csr(mask, w, storage_dtype=wdtype)
+        wd = jnp.asarray(np.where(mask, w, 0.0), wdtype)
+        pre_sp = jnp.asarray(rng.random(p) < 0.2)
+        post_sp = jnp.asarray(rng.random(q) < 0.2)
+        pre_t = jnp.asarray(rng.random(p).astype(np.float32) * 2)
+        post_t = jnp.asarray(rng.random(q).astype(np.float32) * 2)
+        return mask, csr, wd, pre_sp, post_sp, pre_t, post_t
+
+    def _scatter(self, csr, rows, n_pre):
+        from repro.core.synapses import CSRFanin, csr_to_dense
+        return csr_to_dense(CSRFanin(csr.idx, rows, csr.valid), n_pre)
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.integers(min_value=2, max_value=120),
+           st.integers(min_value=1, max_value=60),
+           st.floats(min_value=0.05, max_value=0.6),
+           st.sampled_from(["float32", "float16"]))
+    @settings(max_examples=20, deadline=None)
+    def test_stdp_csr_bitwise_equals_dense(self, seed, p, q, density, wdtype):
+        from repro.core.plasticity import (STDPConfig, STDPState, stdp_step,
+                                           stdp_step_csr)
+
+        wdtype = jnp.dtype(wdtype)
+        mask, csr, wd, pre_sp, post_sp, pre_t, post_t = self._instance(
+            seed, p, q, density, wdtype)
+        cfg = STDPConfig(a_plus=0.013, a_minus=0.009, w_min=0.0, w_max=4.0)
+        st0 = STDPState(pre_trace=pre_t, post_trace=post_t)
+        st_d, w_d = stdp_step(cfg, st0, wd, jnp.asarray(mask), pre_sp, post_sp)
+        st_c, w_c = stdp_step_csr(cfg, st0, csr.weight, csr.idx, csr.valid,
+                                  pre_sp, post_sp)
+        np.testing.assert_array_equal(np.asarray(w_d, np.float32),
+                                      self._scatter(csr, w_c, p))
+        np.testing.assert_array_equal(np.asarray(st_d.pre_trace),
+                                      np.asarray(st_c.pre_trace))
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.sampled_from(["float32", "float16"]))
+    @settings(max_examples=10, deadline=None)
+    def test_da_stdp_csr_bitwise_equals_dense(self, seed, wdtype):
+        from repro.core.plasticity import (STDPConfig, da_stdp_step,
+                                           da_stdp_step_csr,
+                                           init_da_stdp_state)
+
+        wdtype = jnp.dtype(wdtype)
+        p, q = 80, 40
+        mask, csr, wd, pre_sp, post_sp, pre_t, post_t = self._instance(
+            seed, p, q, 0.3, wdtype)
+        cfg = STDPConfig(a_plus=0.01, a_minus=0.004, w_max=5.0, tau_elig=150.0)
+        st_d = init_da_stdp_state(p, q, wdtype)._replace(
+            pre_trace=pre_t, post_trace=post_t)
+        st_c = init_da_stdp_state(p, q, wdtype,
+                                  fanin=csr.idx.shape[1])._replace(
+            pre_trace=pre_t, post_trace=post_t)
+        da = jnp.float32(0.7)
+        # two ticks so the eligibility decay path is exercised
+        for _ in range(2):
+            st_d, wd = da_stdp_step(cfg, st_d, wd, jnp.asarray(mask),
+                                    pre_sp, post_sp, da)
+            st_c, wc = da_stdp_step_csr(cfg, st_c, csr.weight, csr.idx,
+                                        csr.valid, pre_sp, post_sp, da)
+            csr = csr._replace(weight=wc)
+        np.testing.assert_array_equal(np.asarray(wd, np.float32),
+                                      self._scatter(csr, wc, p))
+        # eligibility matches at synapse cells (junk cells are masked out
+        # of the weight in both layouts)
+        ed = np.asarray(st_d.elig, np.float32)
+        idx = np.asarray(csr.idx)
+        valid = np.asarray(csr.valid)
+        ec = np.asarray(st_c.elig, np.float32)
+        cols = np.broadcast_to(np.arange(q)[:, None], idx.shape)
+        np.testing.assert_array_equal(ed[idx[valid], cols[valid]], ec[valid])
+
+    @given(st.integers(min_value=0, max_value=2**31 - 1),
+           st.sampled_from(["float32", "float16"]))
+    @settings(max_examples=10, deadline=None)
+    def test_homeostasis_csr_bitwise_equals_dense(self, seed, wdtype):
+        from repro.core.plasticity import (HomeostasisConfig,
+                                           homeostasis_step,
+                                           homeostasis_step_csr)
+
+        wdtype = jnp.dtype(wdtype)
+        mask, csr, wd, pre_sp, post_sp, _, _ = self._instance(
+            seed, 60, 30, 0.35, wdtype)
+        cfg = HomeostasisConfig(target_hz=10.0, tau_avg_ms=500.0, beta=20.0)
+        rng = np.random.default_rng(seed)
+        avg = jnp.asarray(rng.random(30).astype(np.float32) * 40)
+        avg_d, w_d = homeostasis_step(cfg, avg, wd, post_sp)
+        avg_c, w_c = homeostasis_step_csr(cfg, avg, csr.weight, post_sp)
+        np.testing.assert_array_equal(np.asarray(avg_d), np.asarray(avg_c))
+        np.testing.assert_array_equal(np.asarray(w_d, np.float32),
+                                      self._scatter(csr, w_c, 60))
+
+
 class TestMoEInvariants:
     @given(st.integers(min_value=0, max_value=10_000))
     @settings(max_examples=10, deadline=None)

@@ -219,6 +219,13 @@ class TestEngineParity:
         assert np.array_equal(rasters["loop"], rasters["sparse"])
 
     def test_plastic_projection_keeps_learning_under_sparse(self):
+        """propagation="sparse" now stores plastic projections CSR too
+        (PR 4): weights live as [post, fanin] rows, learning runs on them,
+        and the scattered rows equal the packed (dense-stored) weights
+        bit-for-bit. The full plastic matrix lives in
+        tests/test_plasticity_sparse.py."""
+        from repro.core.synapses import CSRFanin, csr_to_dense
+
         def build(propagation):
             net = NetworkBuilder(seed=5)
             net.add_spike_generator("pre", 30, rate_hz=80.0)
@@ -230,13 +237,19 @@ class TestEngineParity:
         finals = {}
         for prop in ("packed", "sparse"):
             c = build(prop)
-            assert c.static.csr_projs == frozenset()  # plastic -> dense
             final, out = run(c.static, c.params, c.state0, TICKS)
-            finals[prop] = (np.asarray(final.weights[0], np.float32),
-                            np.asarray(out["spikes"]))
+            if prop == "sparse":
+                assert c.static.csr_projs == frozenset({0})  # plastic -> CSR
+                w = csr_to_dense(
+                    CSRFanin(c.params.proj_csr_idx[0], final.weights[0],
+                             c.params.masks[0]), 30)
+            else:
+                assert c.static.csr_projs == frozenset()
+                w = np.asarray(final.weights[0], np.float32)
+            finals[prop] = (w, np.asarray(out["spikes"]))
         assert np.array_equal(finals["packed"][1], finals["sparse"][1])
         assert np.array_equal(finals["packed"][0], finals["sparse"][0])
-        w0 = np.asarray(build("sparse").state0.weights[0], np.float32)
+        w0 = np.asarray(build("packed").state0.weights[0], np.float32)
         assert finals["sparse"][0].sum() != w0.sum()
 
 

@@ -1,0 +1,149 @@
+"""Serving-runtime benchmark — sustained multi-tenant session throughput.
+
+Measures the ``repro.serve`` lane scheduler on Synfire4-mini (the paper's
+real-time MCU configuration) at N ∈ {1, 8, 64} concurrent tenants: every
+tenant is an independent session (own stimulus stream, own state) packed
+into one vmapped device program, advanced in fixed chunks with streaming
+monitors — no [T, N] raster exists anywhere, host traffic is one flush per
+measurement. Reported per cell:
+
+* ``ms_per_chunk``  — wall time to advance all N tenants one chunk
+* ``sessions_per_sec`` — tenant-chunks served per second (N / chunk wall)
+* ``session_ticks_per_sec`` — aggregate simulated ticks/s across tenants
+* ``session_bytes`` — per-tenant device footprint from the memory ledger
+
+Cells are timed best-of-``reps`` interleaved (same protocol as
+``bench_engine``) and merged into ``BENCH_engine.json`` under net
+``serve_synfire4_mini`` with ``batch=N`` — the existing keyed-merge
+contract, so serve cells track PR-over-PR like the engine cells.
+
+Seed determinism is asserted per cell exactly like the engine sweep
+(``benchmarks/run.py --smoke`` gates it in CI): rebuilding the fleet with
+the same tenant seeds and re-running the same chunk schedule must
+reproduce every tenant's flushed spike counts bit-for-bit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.configs.synfire4 import SYNFIRE4_MINI, build_synfire  # noqa: E402
+from repro.serve import LaneScheduler  # noqa: E402
+
+_REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+TENANTS = (1, 8, 64)
+
+
+def _fleet(n_tenants: int) -> LaneScheduler:
+    net = build_synfire(SYNFIRE4_MINI, policy="fp16")
+    sched = LaneScheduler(net, capacity=n_tenants)
+    for i in range(n_tenants):
+        sched.admit(f"tenant{i}", seed=i)
+    return sched
+
+
+def _counts(sched: LaneScheduler) -> np.ndarray:
+    return np.stack([f["spike_count"]
+                     for f in sched.flush_all().values()])
+
+
+def bench_serve(chunk_ticks: int = 200, n_chunks: int = 4, reps: int = 3,
+                write_json: bool = True,
+                check_determinism: bool = True) -> tuple[list[dict], dict]:
+    results: list[dict] = []
+    fleets = {n: _fleet(n) for n in TENANTS}
+    # Warmup: one chunk per fleet compiles + pages in the program.
+    for sched in fleets.values():
+        sched.step(chunk_ticks)
+
+    walls = {n: float("inf") for n in TENANTS}
+    for _ in range(reps):
+        for n, sched in fleets.items():
+            t0 = time.perf_counter()
+            for _ in range(n_chunks):
+                sched.step(chunk_ticks)
+            # step() is dispatch-async; a flush forces device completion
+            # and is itself part of the serving loop being measured.
+            sched.flush_all()
+            walls[n] = min(walls[n], time.perf_counter() - t0)
+
+    if check_determinism:
+        # Same tenant seeds + same chunk schedule => bitwise-identical
+        # flushed counts, fresh fleet vs fresh fleet (the serve cells'
+        # seed-determinism gate, mirroring the engine cells').
+        for n in TENANTS:
+            runs = []
+            for _ in range(2):
+                sched = _fleet(n)
+                for _ in range(2):
+                    sched.step(chunk_ticks)
+                runs.append(_counts(sched))
+            assert np.array_equal(runs[0], runs[1]), (
+                f"serve cell N={n}: same-seed fleet rerun produced "
+                "different flushed spike counts")
+            assert runs[0].sum() > 0, (
+                f"serve cell N={n}: no tenant fired — dead benchmark")
+
+    n_neurons = fleets[1].net.n_neurons
+    for n in TENANTS:
+        wall_chunk = walls[n] / n_chunks
+        results.append({
+            "net": f"serve_{SYNFIRE4_MINI.name}",
+            "n_neurons": n_neurons,
+            "propagation": "packed",
+            "backend": "xla",
+            "batch": n,
+            "record": "monitors",
+            "ticks": chunk_ticks * n_chunks,
+            "reps": reps,
+            "chunk_ticks": chunk_ticks,
+            "wall_s": round(walls[n], 4),
+            "ms_per_chunk": round(wall_chunk * 1e3, 3),
+            "sessions_per_sec": round(n / wall_chunk, 1),
+            "session_ticks_per_sec": round(
+                n * chunk_ticks * n_chunks / walls[n], 1),
+            "us_per_tick": round(walls[n] / (chunk_ticks * n_chunks) * 1e6,
+                                 2),
+            "session_bytes": fleets[n].session_bytes,
+        })
+
+    if write_json:
+        _merge(os.path.join(_REPO_ROOT, "BENCH_engine.json"), results)
+
+    derived = {
+        f"serve_mini_n{n}_sessions_per_sec":
+            next(r for r in results if r["batch"] == n)["sessions_per_sec"]
+        for n in TENANTS
+    }
+    derived["serve_mini_n64_ms_per_chunk"] = next(
+        r for r in results if r["batch"] == 64)["ms_per_chunk"]
+    derived["serve_session_bytes"] = results[0]["session_bytes"]
+    return results, derived
+
+
+def _merge(out_path: str, rows: list[dict]) -> None:
+    """Merge serve cells into BENCH_engine.json under the engine sweep's
+    keyed-cell contract (net, propagation, backend, batch, record)."""
+    from benchmarks.bench_engine import _merge_payload
+
+    payload = _merge_payload(out_path, {"results": rows})
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def main() -> None:
+    rows, derived = bench_serve()
+    print(json.dumps(derived, indent=1))
+    for r in rows:
+        print(" ", r)
+
+
+if __name__ == "__main__":
+    main()

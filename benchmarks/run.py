@@ -32,6 +32,7 @@ def _run(name, fn):
 
 def main(argv: list[str] | None = None) -> None:
     from benchmarks.bench_engine import bench_engine
+    from benchmarks.bench_serve import bench_serve
     from benchmarks.report import paper_report
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -53,9 +54,17 @@ def main(argv: list[str] | None = None) -> None:
             # full 1 s accuracy window (the headline number), shortened
             # mini horizon; keep smoke numbers out of BENCH_engine.json
             return paper_report(mini_ticks=3000, write_json=False)
+
+        def serve_fn():
+            # tiny chunks, one rep — but ALWAYS the seed-determinism gate:
+            # a same-seed tenant fleet must reproduce its flushed counts
+            # bit-for-bit (the serve cells' merge-key contract)
+            return bench_serve(chunk_ticks=40, n_chunks=2, reps=1,
+                               write_json=False, check_determinism=True)
     else:
         engine_fn = bench_engine
         report_fn = paper_report
+        serve_fn = bench_serve
 
     results = {}
     for name, fn in [
@@ -65,6 +74,7 @@ def main(argv: list[str] | None = None) -> None:
         ("memory_fp16_halving", paper_tables.memory_fp16_halving),
         ("table5_performance", paper_tables.table5_performance),
         ("bench_engine", engine_fn),  # writes/merges BENCH_engine.json
+        ("bench_serve", serve_fn),  # serve_* cells, same JSON merge
         ("paper_report", report_fn),  # accuracy / real-time / energy metrics
     ]:
         results[name] = _run(name, fn)

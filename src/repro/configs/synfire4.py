@@ -19,7 +19,7 @@ import math
 
 from repro.core.network import CompiledNetwork, NetworkBuilder
 from repro.core.neurons import izh4
-from repro.core.plasticity import STDPConfig
+from repro.core.plasticity import HomeostasisConfig, STDPConfig
 from repro.memory import MCU_BUDGET_BYTES, MemoryLedger
 
 __all__ = ["SynfireConfig", "SYNFIRE4", "SYNFIRE4_MINI", "SYNFIRE4_X10",
@@ -110,6 +110,8 @@ def build_synfire(
     propagation: str = "packed",
     pallas_interpret: bool | None = None,
     stdp_chain: STDPConfig | None = None,
+    homeo_chain: HomeostasisConfig | None = None,
+    homeostasis_period: int = 0,
 ) -> CompiledNetwork:
     """Build the Synfire benchmark under a precision policy.
 
@@ -129,6 +131,12 @@ def build_synfire(
     setting). Under ``propagation="sparse"``/``"auto"`` those projections
     store CSR fan-in rows, which is what keeps a plastic ``SYNFIRE4_X10``
     inside the paper's 8.477 MB budget (``benchmarks/bench_engine.py``).
+
+    ``homeo_chain`` + ``homeostasis_period`` add CARLsim's slow-timer
+    synaptic scaling to the same chain projections (requires
+    ``stdp_chain``): the engine applies it every ``homeostasis_period``
+    ticks at segment/chunk boundaries — the serving-runtime stabilizer
+    (``repro.serve``).
     """
     net = NetworkBuilder(seed=seed)
     net.add_spike_generator(
@@ -147,7 +155,7 @@ def build_synfire(
     for i in range(cfg.n_segments - 1):
         net.connect(f"Cexc{i}", f"Cexc{i + 1}", fanin=cfg.fanin_exc,
                     weight=cfg.w_exc, delay_ms=cfg.delay_ff, mode=cfg.connect_mode,
-                    stdp=stdp_chain)
+                    stdp=stdp_chain, homeostasis=homeo_chain)
         net.connect(f"Cexc{i}", f"Cinh{i + 1}", fanin=cfg.fanin_exc,
                     weight=cfg.w_inh_drive, delay_ms=cfg.delay_ff, mode=cfg.connect_mode)
         net.connect(f"Cinh{i + 1}", f"Cexc{i + 1}", fanin=cfg.fanin_inh,
@@ -155,7 +163,8 @@ def build_synfire(
     # Recurrent closure: segment 3 -> segment 0.
     last = cfg.n_segments - 1
     net.connect(f"Cexc{last}", "Cexc0", fanin=cfg.fanin_exc, weight=cfg.w_exc,
-                delay_ms=cfg.delay_ff, mode=cfg.connect_mode, stdp=stdp_chain)
+                delay_ms=cfg.delay_ff, mode=cfg.connect_mode, stdp=stdp_chain,
+                homeostasis=homeo_chain)
     net.connect(f"Cexc{last}", "Cinh0", fanin=cfg.fanin_exc,
                 weight=cfg.w_inh_drive, delay_ms=cfg.delay_ff, mode=cfg.connect_mode)
 
@@ -164,4 +173,5 @@ def build_synfire(
                        monitor_ms_hint=monitor_ms_hint, monitors=monitors,
                        method=method,
                        backend=backend, propagation=propagation,
-                       pallas_interpret=pallas_interpret)
+                       pallas_interpret=pallas_interpret,
+                       homeostasis_period=homeostasis_period)

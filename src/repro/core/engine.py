@@ -59,6 +59,16 @@ Recording (``record=``, a jit-static argument):
 ``record_v`` / ``record_i`` stay independent switches for ``[T, N]``
 voltage/current traces (use ``telemetry.VoltageProbe`` for the streaming
 equivalent on selected neurons).
+
+Serving (``repro.serve`` rides these hooks): ``run(gen_base=...)`` swaps
+the generator draw for a counter-keyed stream indexed by the absolute
+tick, making runs call-split invariant (chunked sessions ≡ uninterrupted,
+bitwise); ``tel_carry``/``return_tel_carry`` thread telemetry
+accumulators across calls; ``active`` gates a scheduler lane silent.
+Networks compiled with ``homeostasis_period=p`` segment the scan and
+apply CARLsim's slow-timer synaptic scaling every p ticks
+(:func:`_apply_homeostasis`) — the chunk-boundary homeostasis the
+ROADMAP called for.
 """
 from __future__ import annotations
 
@@ -74,7 +84,12 @@ from repro.core import neurons as nrn
 from repro.telemetry import monitors as tel
 from repro.core.conductance import coba_current, decay_and_deliver
 from repro.core.network import CompiledNetwork, NetParams, NetState, NetStatic
-from repro.core.plasticity import da_stdp_step, da_stdp_step_csr
+from repro.core.plasticity import (
+    da_stdp_step,
+    da_stdp_step_csr,
+    homeostasis_step,
+    homeostasis_step_csr,
+)
 from repro.core.synapses import propagate, stp_update
 
 __all__ = ["StepOutput", "step", "run", "run_batch", "Engine"]
@@ -215,7 +230,7 @@ def step(
     new_state = NetState(
         t=t + 1, key=key, neurons=new_neurons, ring=ring,
         weights=tuple(new_weights), stp=tuple(new_stp), stdp=tuple(new_stdp),
-        cond=cond,
+        cond=cond, homeo=state.homeo,
     )
     out = StepOutput(
         spikes=spikes, v=new_neurons.v.astype(f32), i_syn=i_syn
@@ -258,6 +273,42 @@ def _proj(w: jax.Array):
 _RECORD_MODES = ("raster", "monitors", "both", "none")
 
 
+def _apply_homeostasis(static, state: NetState, counts: jax.Array,
+                       active: jax.Array | None = None) -> NetState:
+    """Chunk-boundary homeostasis — CARLsim's slow-timer synaptic scaling.
+
+    Runs between scan segments (every ``static.homeo_period`` ticks), never
+    inside the tick: ``counts`` holds each neuron's spike total over the
+    elapsed segment, and passing it as the op's ``post_spikes`` with
+    ``dt = period · static.dt`` makes the op's instantaneous-rate term
+    ``counts · 1000 / chunk_ms`` — exactly the segment's mean rate in Hz —
+    while the averaging decay becomes ``exp(-chunk_ms / tau_avg)``, one
+    slow-timer update per boundary. CSR-stored projections run
+    :func:`homeostasis_step_csr` on their fan-in rows, dense-stored ones
+    :func:`homeostasis_step`; the per-synapse ``w · scale[post]`` product is
+    identical in both layouts, so packed/sparse/auto stay bit-identical.
+
+    ``active`` (scalar bool, serving lanes) gates the whole update: an idle
+    lane is silent, and without the gate its below-target average would
+    grow every plastic weight toward ``w_max`` while it waits.
+    """
+    chunk_ms = static.homeo_period * static.dt
+    new_w = list(state.weights)
+    new_h = list(state.homeo)
+    for j, cfg in enumerate(static.homeo):
+        if cfg is None:
+            continue
+        spec = static.projections[j]
+        cnt = counts[spec.post_slice]
+        fn = homeostasis_step_csr if j in static.csr_projs else homeostasis_step
+        avg2, w2 = fn(cfg, state.homeo[j], state.weights[j], cnt, chunk_ms)
+        if active is not None:
+            avg2 = jnp.where(active, avg2, state.homeo[j])
+            w2 = jnp.where(active, w2, state.weights[j])
+        new_h[j], new_w[j] = avg2, w2
+    return state._replace(weights=tuple(new_w), homeo=tuple(new_h))
+
+
 def _run_impl(
     static: NetStatic,
     params: NetParams,
@@ -270,11 +321,19 @@ def _run_impl(
     record_v: bool = False,
     record_i: bool = False,
     gen_chunk: int | None = None,
+    gen_base: jax.Array | None = None,  # session counter-keyed gen stream
+    tel_carry: tuple | None = None,  # resume telemetry accumulators
+    return_tel_carry: bool = False,
+    active: jax.Array | None = None,  # scalar bool: serving-lane gate
 ):
     if record not in _RECORD_MODES:
         raise ValueError(f"record must be one of {_RECORD_MODES}, got {record!r}")
     if gen_chunk is not None and gen_chunk < 1:
         raise ValueError(f"gen_chunk must be >= 1, got {gen_chunk}")
+    if gen_base is not None and gen_chunk is not None:
+        raise ValueError(
+            "gen_base and gen_chunk are mutually exclusive — a session "
+            "stream is already bounded per call by the chunk size")
     # A chunk covering the whole run degenerates to the whole-run draw
     # (bitwise identical, and the buffer is min(T, gen_chunk) ticks wide
     # either way — the O(gen_chunk) bound still holds).
@@ -285,6 +344,19 @@ def _run_impl(
             f"gen_chunk ({gen_chunk}) must divide n_steps ({n_steps}) — the "
             "chunked pre-draw scans whole chunks"
         )
+    has_homeo = (static.homeo_period > 0
+                 and any(h is not None for h in static.homeo))
+    if has_homeo:
+        if n_steps % static.homeo_period:
+            raise ValueError(
+                f"n_steps ({n_steps}) must be a multiple of the homeostasis "
+                f"period ({static.homeo_period}) — the slow timer fires at "
+                "whole-segment boundaries (chunked serving calls must keep "
+                "their chunk size a multiple of the period)")
+        if chunked and gen_chunk != static.homeo_period:
+            raise ValueError(
+                f"gen_chunk ({gen_chunk}) must equal the homeostasis period "
+                f"({static.homeo_period}) — both ride the same outer scan")
     want_raster = record in ("raster", "both")
     want_mon = record in ("monitors", "both")
     if want_mon and not static.monitors:
@@ -292,6 +364,8 @@ def _run_impl(
             "record requests monitors but the network was compiled with "
             "monitors=() — pass monitor specs (or 'default') to compile()"
         )
+    if return_tel_carry and not want_mon:
+        raise ValueError("return_tel_carry requires record='monitors'/'both'")
 
     ie_xs = i_ext if i_ext is not None else jnp.zeros((n_steps, 0), jnp.float32)
     da_xs = (
@@ -333,20 +407,44 @@ def _run_impl(
     # uniform stream than the whole-run draw — same seed ⇒ same raster at
     # a fixed chunk size, but chunked vs unchunked (or different chunk
     # sizes) are different realizations of the same generator statistics.
+    # ``gen_base`` (sessions, repro.serve): a COUNTER-KEYED stream — tick
+    # t's uniforms come from ``fold_in(gen_base, t)`` with t the *absolute*
+    # tick (``state.t`` carries across calls), so the realized stimulus
+    # depends only on (gen_base, t), never on how the horizon is cut into
+    # calls. That is the chunked-serving bit-identity guarantee: one
+    # run(T) and k chunked run(T/k) calls consume identical uniforms at
+    # identical ticks. The carry key is left untouched (nothing else draws
+    # per-tick RNG), so the final NetState is bitwise call-split-invariant
+    # too. Yet another keyed stream than the whole-run or gen_chunk draws —
+    # same generator statistics, different realization, equally
+    # deterministic.
     k_draw = None
-    if static.n_gen > 0:
+    if static.n_gen > 0 and gen_base is None:
         k_draw, k_carry = jax.random.split(state.key)
         state = state._replace(key=k_carry)
-    if static.n_gen > 0 and not chunked:
+    if static.n_gen > 0 and gen_base is not None:
+        ts = state.t + jnp.arange(n_steps, dtype=jnp.int32)
+        tick_keys = jax.vmap(lambda i: jax.random.fold_in(gen_base, i))(ts)
+        gu_xs = jax.vmap(lambda k: jax.random.uniform(
+            k, (static.n_gen,), dtype=jnp.float32))(tick_keys)
+    elif static.n_gen > 0 and not chunked:
         gu_xs = jax.random.uniform(k_draw, (n_steps, static.n_gen),
                                    dtype=jnp.float32)
     else:
         gu_xs = jnp.zeros((n_steps, 0), jnp.float32)
+    if active is not None and gu_xs.shape[-1]:
+        # Idle serving lanes draw no generator spikes (uniform 1.0 is never
+        # < p): the network relaxes to rest and emits no events.
+        gu_xs = jnp.where(active, gu_xs, 1.0)
 
-    tel0 = tel.init_carry(static, n_steps) if want_mon else ()
+    tel0 = (tel_carry if tel_carry is not None else
+            tel.init_carry(static, n_steps)) if want_mon else ()
+    # Per-neuron spike counts over the current homeostasis segment, reset
+    # at each boundary (the slow timer's input; empty slot when disabled).
+    cnt0 = jnp.zeros((static.n,), jnp.int32) if has_homeo else ()
 
     def body_wrap(carry, xs):
-        st, tel_c = carry
+        st, tel_c, cnt = carry
         ie, da, gu, ix = xs
         ie = ie if ie.shape[-1] else None  # static shape: decided at trace time
         da = da[0] if da.shape[-1] else None
@@ -361,36 +459,57 @@ def _run_impl(
                                        out.v, new_state.weights)
         else:
             tel_ys = None
+        if has_homeo:
+            cnt = cnt + out.spikes.astype(jnp.int32)
         ys = (out.spikes if want_raster else None,
               out.v if record_v else None,
               out.i_syn if record_i else None,
               tel_ys)
-        return (new_state, tel_c), ys
+        return (new_state, tel_c, cnt), ys
 
-    if not chunked:
-        (final, tel_final), ys = jax.lax.scan(
-            body_wrap, (state, tel0), (ie_xs, da_xs, gu_xs, ix_xs),
+    # Segment the scan when anything fires at sub-run boundaries: the
+    # homeostasis slow timer and/or the per-chunk generator draw. Both ride
+    # ONE outer scan (their periods are forced equal above).
+    seg_len = static.homeo_period if has_homeo else (
+        gen_chunk if chunked else None)
+    if seg_len is None:
+        (final, tel_final, _), ys = jax.lax.scan(
+            body_wrap, (state, tel0, cnt0), (ie_xs, da_xs, gu_xs, ix_xs),
             length=n_steps)
     else:
-        n_chunks = n_steps // gen_chunk
-        chunk_keys = jax.random.split(k_draw, n_chunks)
+        n_seg = n_steps // seg_len
 
         def resh(x):
-            return x.reshape((n_chunks, gen_chunk) + x.shape[1:])
+            return x.reshape((n_seg, seg_len) + x.shape[1:])
 
-        def chunk_body(carry, xs):
-            key_c, ie_c, da_c, ix_c = xs
-            gu_c = jax.random.uniform(key_c, (gen_chunk, static.n_gen),
-                                      dtype=jnp.float32)
-            return jax.lax.scan(body_wrap, carry, (ie_c, da_c, gu_c, ix_c),
-                                length=gen_chunk)
+        if chunked:
+            xs = (jax.random.split(k_draw, n_seg),
+                  resh(ie_xs), resh(da_xs), resh(ix_xs))
+        else:
+            xs = (resh(ie_xs), resh(da_xs), resh(gu_xs), resh(ix_xs))
 
-        (final, tel_final), ys = jax.lax.scan(
-            chunk_body, (state, tel0),
-            (chunk_keys, resh(ie_xs), resh(da_xs), resh(ix_xs)),
-            length=n_chunks)
-        # Per-tick outputs come back [n_chunks, gen_chunk, ...]; flatten
-        # the chunk axes so every record mode sees the usual [T, ...].
+        def seg_body(carry, seg_xs):
+            if chunked:
+                key_c, ie_c, da_c, ix_c = seg_xs
+                gu_c = jax.random.uniform(key_c, (seg_len, static.n_gen),
+                                          dtype=jnp.float32)
+                if active is not None:
+                    gu_c = jnp.where(active, gu_c, 1.0)
+            else:
+                ie_c, da_c, gu_c, ix_c = seg_xs
+            carry, seg_ys = jax.lax.scan(body_wrap, carry,
+                                         (ie_c, da_c, gu_c, ix_c),
+                                         length=seg_len)
+            if has_homeo:
+                st, tel_c, cnt = carry
+                st = _apply_homeostasis(static, st, cnt, active)
+                carry = (st, tel_c, jnp.zeros_like(cnt))
+            return carry, seg_ys
+
+        (final, tel_final, _), ys = jax.lax.scan(
+            seg_body, (state, tel0, cnt0), xs, length=n_seg)
+        # Per-tick outputs come back [n_seg, seg_len, ...]; flatten the
+        # segment axes so every record mode sees the usual [T, ...].
         ys = jax.tree.map(
             lambda y: y.reshape((n_steps,) + y.shape[2:]), ys)
     spikes, v, i, tel_ys = ys
@@ -403,11 +522,16 @@ def _run_impl(
         outputs["i_syn"] = i
     if want_mon:
         outputs["telemetry"] = tel.collect(static, tel_final, tel_ys)
+        if return_tel_carry:
+            # Raw accumulators, resumable: feed back as ``tel_carry`` on
+            # the next chunked call (repro.serve.SessionMonitors).
+            outputs["tel_carry"] = tel_final
     return final, outputs
 
 
 @partial(jax.jit, static_argnames=("static", "n_steps", "record", "record_v",
-                                   "record_i", "gen_chunk"))
+                                   "record_i", "gen_chunk",
+                                   "return_tel_carry"))
 def run(
     static: NetStatic,
     params: NetParams,
@@ -420,6 +544,10 @@ def run(
     record_v: bool = False,
     record_i: bool = False,
     gen_chunk: int | None = None,
+    gen_base: jax.Array | None = None,
+    tel_carry: tuple | None = None,
+    return_tel_carry: bool = False,
+    active: jax.Array | None = None,
 ):
     """Scan ``step`` for ``n_steps`` ticks; returns (state, outputs).
 
@@ -435,10 +563,32 @@ def run(
     horizon. Chunked draws consume a different (still seed-deterministic)
     RNG stream than the whole-run draw; a chunk >= ``n_steps`` degenerates
     to the whole-run draw bitwise. See ``_run_impl``.
+
+    Serving extensions (``repro.serve`` is the intended caller):
+
+    * ``gen_base`` — counter-keyed generator stream: tick t draws from
+      ``fold_in(gen_base, t)`` with t the absolute ``state.t``, making the
+      run **call-split invariant**: one ``run(T)`` and k chunked calls of
+      ``run(T/k)`` (state threaded through) produce bit-identical rasters,
+      weights, and final state. Mutually exclusive with ``gen_chunk``.
+    * ``tel_carry`` / ``return_tel_carry`` — resume the in-scan monitor
+      accumulators from a previous call and hand the raw final carry back
+      (``outputs["tel_carry"]``), so telemetry accumulates across an
+      unbounded chunk sequence with periodic host flushes.
+    * ``active`` — scalar bool lane gate: when False the generators are
+      silenced and homeostasis holds, so an idle serving lane parks at rest
+      and contributes no spike events.
+
+    Networks compiled with ``homeostasis_period=p`` apply CARLsim's
+    slow-timer synaptic scaling every p ticks from in-scan segment spike
+    counts (``n_steps`` must be a multiple of p; see
+    :func:`_apply_homeostasis`).
     """
     return _run_impl(static, params, state, n_steps, i_ext=i_ext,
                      dopamine=dopamine, record=record, record_v=record_v,
-                     record_i=record_i, gen_chunk=gen_chunk)
+                     record_i=record_i, gen_chunk=gen_chunk,
+                     gen_base=gen_base, tel_carry=tel_carry,
+                     return_tel_carry=return_tel_carry, active=active)
 
 
 @partial(jax.jit, static_argnames=("static", "n_steps", "batch", "record",

@@ -29,6 +29,7 @@ from repro.core import neurons as nrn
 from repro.core.conductance import COBAConfig, ConductanceState, init_conductance_state
 from repro.core.plasticity import (
     DASTDPState,
+    HomeostasisConfig,
     STDPConfig,
     STDPState,
     init_da_stdp_state,
@@ -158,6 +159,15 @@ class NetStatic:
     # Compiled in-scan monitor specs (repro.telemetry); the engine lowers
     # them into scan-carry accumulators when run(record="monitors"/"both").
     monitors: tuple[telem.MonitorSpec, ...] = ()
+    # Chunk-boundary homeostasis (CARLsim's slow-timer synaptic scaling),
+    # aligned with projections (None = no homeostasis). The engine applies
+    # it every ``homeo_period`` ticks — between inner scan segments, never
+    # inside the tick — from spike counts accumulated over the segment.
+    # Only plastic non-STP projections may carry a config (their weights
+    # are re-read every tick; bucketed weights are hoisted per run and
+    # must stay loop-invariant).
+    homeo: tuple[HomeostasisConfig | None, ...] = ()
+    homeo_period: int = 0  # ticks between applications (0 = never)
 
     @property
     def gen_spans(self) -> tuple[tuple[int, int], ...]:
@@ -231,6 +241,10 @@ class NetState(NamedTuple):
     stp: tuple[STPState | None, ...]
     stdp: tuple[STDPState | DASTDPState | None, ...]
     cond: ConductanceState | None
+    # Per-projection homeostasis running-average firing rate [post_size]
+    # f32 (None where static.homeo[j] is None). Lives in NetState so the
+    # slow-timer state survives chunked serving calls and checkpoints.
+    homeo: tuple[jax.Array | None, ...] = ()
 
 
 @dataclasses.dataclass
@@ -245,6 +259,7 @@ class _PendingConnect:
     stp: STPConfig | None
     da_modulated: bool
     mode: str = "fanin"  # "fanin" (exact) | "prob" (CARLsim random connect)
+    homeostasis: HomeostasisConfig | None = None
 
 
 class NetworkBuilder:
@@ -291,13 +306,16 @@ class NetworkBuilder:
         stp: STPConfig | None = None,
         da_modulated: bool = False,
         mode: str = "fanin",
+        homeostasis: HomeostasisConfig | None = None,
     ) -> None:
         if delay_ms < 1:
             raise ValueError("delay must be >= 1 ms (one tick)")
+        if homeostasis is not None and stp is not None:
+            raise ValueError("homeostasis on STP projections is unsupported")
         self._connects.append(
             _PendingConnect(pre, post, fanin, weight, delay_ms,
-                            plastic or stdp is not None, stdp, stp, da_modulated,
-                            mode)
+                            plastic or stdp is not None or homeostasis is not None,
+                            stdp, stp, da_modulated, mode, homeostasis)
         )
 
     # -- compile ------------------------------------------------------------------
@@ -316,11 +334,22 @@ class NetworkBuilder:
         propagation: str = "packed",
         pallas_interpret: bool | None = None,
         pack_density: float = 0.5,
+        homeostasis_period: int = 0,
     ) -> "CompiledNetwork":
         if backend not in ("xla", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         if propagation not in ("packed", "sparse", "auto", "loop"):
             raise ValueError(f"unknown propagation {propagation!r}")
+        if any(c.homeostasis is not None for c in self._connects):
+            if homeostasis_period < 1:
+                raise ValueError(
+                    "connections carry homeostasis configs but "
+                    f"homeostasis_period is {homeostasis_period} — pass the "
+                    "slow-timer period (in ticks) to compile()")
+        elif homeostasis_period:
+            raise ValueError(
+                "homeostasis_period set but no connection has a "
+                "HomeostasisConfig")
         if pallas_interpret is None:
             pallas_interpret = jax.default_backend() != "tpu"
         if isinstance(policy, str):
@@ -362,6 +391,7 @@ class NetworkBuilder:
         specs: list[ProjectionSpec] = []
         projs: list[ProjectionParams] = []
         stdp_cfgs: list[STDPConfig | None] = []
+        homeo_cfgs: list[HomeostasisConfig | None] = []
         for c in self._connects:
             gpre = next(s for _, _, s in self._groups if s.name == c.pre)
             gpost = next(s for _, _, s in self._groups if s.name == c.post)
@@ -379,6 +409,7 @@ class NetworkBuilder:
             if c.stdp is not None and c.da_modulated and c.stdp.tau_elig is None:
                 c = dataclasses.replace(c, stdp=dataclasses.replace(c.stdp, tau_elig=100.0))
             stdp_cfgs.append(c.stdp)
+            homeo_cfgs.append(c.homeostasis)
         for j, p in enumerate(projs):
             m = np.asarray(p.mask)
             specs[j] = dataclasses.replace(
@@ -493,10 +524,30 @@ class NetworkBuilder:
                     fanin=spec.fanin if j in csr_set else None))
             else:
                 stdp_states.append(init_stdp_state(spec.pre_size, spec.post_size))
+        # Homeostasis slow-timer state: one running-average rate row per
+        # homeostatic projection's post group (CARLsim keeps per-neuron
+        # averages; the per-projection row is the same thing scoped to the
+        # projection so chunked serving can checkpoint/carry it in
+        # NetState). Homeostasis needs the per-tick weight re-read of the
+        # plastic path — bucketed (hoisted) weights cannot scale mid-run.
+        homeo_states: list[jax.Array | None] = []
+        for j, hcfg in enumerate(homeo_cfgs):
+            if hcfg is None:
+                homeo_states.append(None)
+                continue
+            if specs[j].stp is not None or not specs[j].plastic:
+                raise ValueError(
+                    f"homeostasis on {specs[j].name}: only plastic non-STP "
+                    "projections can scale at chunk boundaries")
+            homeo_states.append(jnp.zeros((specs[j].post_size,), jnp.float32))
         mon_specs = telem.resolve(monitors, n=n, n_projections=len(specs),
                                   dt=dt)
         with ledger.stage("7. Auxiliary Data"):
             ledger.register("stdp.traces", tuple(s for s in stdp_states if s is not None))
+            if any(h is not None for h in homeo_states):
+                ledger.register(
+                    "homeo.avg_rate",
+                    tuple(h for h in homeo_states if h is not None))
             if monitor_ms_hint:
                 ledger.register(
                     "monitor.spikes",
@@ -523,6 +574,7 @@ class NetworkBuilder:
             backend=backend, propagation=propagation,
             pallas_interpret=pallas_interpret, izh4_only=izh4_only,
             buckets=buckets, plastic_csr=plastic_csr, monitors=mon_specs,
+            homeo=tuple(homeo_cfgs), homeo_period=int(homeostasis_period),
         )
         params = NetParams(
             neuron=neuron_params,
@@ -539,6 +591,7 @@ class NetworkBuilder:
             t=jnp.int32(0), key=key, neurons=nstate, ring=ring,
             weights=weights,
             stp=tuple(stp_states), stdp=tuple(stdp_states), cond=cond,
+            homeo=tuple(homeo_states),
         )
         return CompiledNetwork(static=static, params=params, state0=state0,
                                ledger=ledger, policy=policy)

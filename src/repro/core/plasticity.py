@@ -215,11 +215,25 @@ def da_stdp_step_csr(
 
 
 # -- homeostatic synaptic scaling (CARLsim setHomeostasis) ---------------------
+#
+# The engine applies these ops on CARLsim's SLOW TIMER, not per tick: at
+# every chunk/segment boundary (``compile(homeostasis_period=p)``,
+# ``engine._apply_homeostasis``) with ``post_spikes`` = the segment's
+# per-neuron spike COUNTS and ``dt`` = the segment length in ms. The
+# ``inst = counts · 1000/dt`` term is then exactly the segment's mean rate
+# in Hz and the decay one ``exp(-segment/tau)`` step — the op works
+# unchanged for both the per-tick (bool spikes, dt = tick) and boundary
+# (counts, dt = period) cadences.
 
 
 @dataclasses.dataclass(frozen=True)
 class HomeostasisConfig:
-    """Multiplicative synaptic scaling toward a target firing rate."""
+    """Multiplicative synaptic scaling toward a target firing rate.
+
+    Attach per connection (``NetworkBuilder.connect(homeostasis=...)``)
+    together with ``compile(homeostasis_period=...)`` to run it on the
+    engine's chunk-boundary slow timer (``repro.serve`` keeps the running
+    average in ``NetState.homeo`` across serving chunks/checkpoints)."""
 
     target_hz: float = 10.0
     tau_avg_ms: float = 10_000.0  # firing-rate averaging window

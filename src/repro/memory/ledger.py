@@ -135,6 +135,14 @@ class MemoryLedger:
         nb = self.name_bytes()
         return sum(v for k, v in nb.items() if k.startswith("monitor."))
 
+    def serve_bytes(self) -> int:
+        """Serving-deployment payload bytes: the per-lane replicated
+        session state + telemetry registered by
+        ``repro.serve.LaneScheduler`` (stage "8. Serve Lanes" — the
+        ramp-up table's extension past the paper's seven load steps)."""
+        nb = self.name_bytes()
+        return sum(v for k, v in nb.items() if k.startswith("serve."))
+
     def synapse_bytes(self) -> int:
         """Connectivity + weight payload bytes (the paper's fp16 headline):
         dense masks/weights plus CSR index tables, whichever each

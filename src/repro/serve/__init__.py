@@ -1,0 +1,35 @@
+"""Session-based SNN serving runtime — the ROADMAP's "serve heavy traffic"
+layer on top of the simulation engine.
+
+* :class:`Session` (``repro.serve.session``) — one tenant's
+  device-resident state advanced as a sequence of fixed-size chunks, with
+  a bit-identity guarantee versus the uninterrupted run and flushable
+  streaming telemetry.
+* :class:`LaneScheduler` (``repro.serve.scheduler``) — N same-topology
+  sessions multiplexed onto the lanes of one vmapped device program
+  (admit / evict / step), idle lanes silenced, footprint in the memory
+  ledger.
+* ``repro.serve.lifecycle`` — chunk-boundary homeostasis rationale +
+  bit-exact session checkpoint/restore (:func:`save_session`,
+  :func:`restore_session`).
+
+See ``examples/edge_serving.py`` and the README's "Serving sessions at
+the edge" section for the end-to-end shape.
+"""
+from repro.serve.lifecycle import (
+    latest_session_step,
+    restore_session,
+    save_session,
+)
+from repro.serve.scheduler import Evicted, LaneScheduler
+from repro.serve.session import Session, SessionMonitors
+
+__all__ = [
+    "Evicted",
+    "LaneScheduler",
+    "Session",
+    "SessionMonitors",
+    "latest_session_step",
+    "restore_session",
+    "save_session",
+]

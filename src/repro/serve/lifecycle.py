@@ -1,0 +1,143 @@
+"""Session lifecycle — chunk-boundary homeostasis + checkpoint/restore.
+
+Two CARLsim "full feature set" capabilities land at the serving layer:
+
+**Slow-timer homeostasis.** ``homeostasis_step_csr`` (and its dense twin)
+have existed at the op level since PR 4; the serving runtime is where they
+finally meet the engine: networks compiled with per-connection
+:class:`~repro.core.plasticity.HomeostasisConfig` and a
+``homeostasis_period`` apply the scaling *between* scan segments — the
+engine's ``_apply_homeostasis`` converts each segment's in-scan spike
+counts into the op's rate terms with ``dt = period · dt`` (CARLsim's slow
+timer: one multiplicative scaling per period, not per tick). Because the
+boundary schedule rides segments of the absolute tick counter, a chunked
+session hits the identical boundaries as one uninterrupted run —
+homeostasis is part of the bit-identity guarantee, not an exception to it
+(``tests/test_serve.py``; chunk sizes must be multiples of the period,
+engine-enforced).
+
+**Checkpoint/restore.** :func:`save_session` / :func:`restore_session`
+persist a live session — ``NetState`` (weights mid-STDP, delay ring,
+homeostasis averages), the telemetry accumulators, the session's stimulus
+key, and the tick cursor — through ``repro.checkpoint.ckpt``'s atomic
+npz writer. The resume guarantee is bit-exact: save at tick j, restore,
+run k more ticks ⇒ identical rasters/weights/state to the session that
+never stopped (hypothesis-asserted for plastic and non-plastic nets in
+fp32 and fp16, ``tests/test_serve.py``). Typed PRNG keys are packed to
+their ``uint32`` key data on save and re-wrapped on restore (npz cannot
+hold extended dtypes).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core.engine import Engine
+from repro.core.network import CompiledNetwork
+from repro.serve.session import Session
+from repro.telemetry import monitors as tel
+
+__all__ = ["save_session", "restore_session", "latest_session_step"]
+
+
+def _is_key(leaf) -> bool:
+    return (hasattr(leaf, "dtype")
+            and jnp.issubdtype(leaf.dtype, jax.dtypes.prng_key))
+
+
+def _pack_keys(tree):
+    """Typed PRNG key leaves -> raw uint32 key data (npz-serializable)."""
+    return jax.tree.map(
+        lambda x: jax.random.key_data(x) if _is_key(x) else x, tree)
+
+
+def _unpack_keys(tree, like):
+    """Re-wrap key data wherever the template ``like`` holds a typed key."""
+    return jax.tree.map(
+        lambda x, ref: _wrap(x) if _is_key(ref) else x, tree, like)
+
+
+def _wrap(data) -> jax.Array:
+    return jax.random.wrap_key_data(jnp.asarray(np.asarray(data), jnp.uint32))
+
+
+def _tel_template(static) -> tuple:
+    """Structure/dtype template of a persistent session telemetry carry:
+    cumulative slots at their compiled shapes, empty elsewhere (matching
+    ``SessionMonitors.absorb``'s stripping)."""
+    return tuple(
+        c if isinstance(s, tel.CUMULATIVE) else ()
+        for s, c in zip(static.monitors, tel.init_carry(static, 1))
+    )
+
+
+def save_session(ckpt_dir: str, session: Session, *,
+                 step: int | None = None) -> str:
+    """Atomically persist a session; returns the checkpoint path.
+
+    ``step`` defaults to the session's tick cursor, so periodic saves sort
+    by simulated time and :func:`latest_session_step` finds the newest.
+    """
+    has_tel = session.monitors is not None and session.monitors.carry is not None
+    payload = {
+        "state": _pack_keys(session.state),
+        "gen_key": jax.random.key_data(session.gen_key),
+        "ticks": np.int32(session.ticks),
+        "tel": session.monitors.carry if has_tel else (),
+        "tel_ticks": np.int32(session.monitors.ticks_since_flush
+                              if has_tel else 0),
+    }
+    return ckpt.save(ckpt_dir, step if step is not None else session.ticks,
+                     payload)
+
+
+def restore_session(ckpt_dir: str, net: CompiledNetwork | Engine, *,
+                    step: int | None = None) -> Session:
+    """Rebuild a session from a checkpoint over the same compiled network.
+
+    Bit-exact resume: the restored session's next ``run(k)`` reproduces
+    the uninterrupted session's ticks exactly — same counter-keyed
+    stimulus stream at the same absolute ticks, same state pytree down to
+    the delay-ring phase and the plasticity/homeostasis traces.
+    """
+    engine = net if isinstance(net, Engine) else Engine(net)
+    static = engine.net.static
+    if step is None:
+        step = ckpt.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no session checkpoints in {ckpt_dir}")
+    has_tel = _file_has_tel(ckpt_dir, step)
+    like = {
+        "state": _pack_keys(engine.net.state0),
+        "gen_key": jax.random.key_data(jax.random.key(0)),
+        "ticks": np.int32(0),
+        "tel": _tel_template(static) if has_tel else (),
+        "tel_ticks": np.int32(0),
+    }
+    payload = ckpt.restore(ckpt_dir, step, like)
+    session = Session.create(
+        engine, key=_wrap(payload["gen_key"]),
+        state=_unpack_keys(payload["state"], engine.net.state0))
+    session.ticks = int(payload["ticks"])
+    if session.monitors is not None and has_tel:
+        session.monitors.carry = tuple(payload["tel"])
+        session.monitors.ticks_since_flush = int(payload["tel_ticks"])
+    return session
+
+
+def latest_session_step(ckpt_dir: str) -> int | None:
+    """Newest saved session step (tick cursor), or None."""
+    return ckpt.latest_step(ckpt_dir)
+
+
+def _file_has_tel(ckpt_dir: str, step: int) -> bool:
+    """Whether the checkpoint holds telemetry accumulators (a session can
+    be saved before its first chunk, or over a monitor-free network — the
+    restore template must mirror what was actually written)."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}.npz")
+    with np.load(path, allow_pickle=False) as data:
+        return any(k.startswith("['tel']") for k in data.files)

@@ -1,0 +1,276 @@
+"""Multi-tenant lane scheduler — same-topology sessions on vmap lanes.
+
+The throughput configuration of the serving runtime: N tenants whose
+networks share one compiled topology (same ``NetStatic``/``NetParams``)
+are packed into the lanes of ONE vmapped device program — the same
+batching machinery as ``Engine.run_batch``, but with *independent
+per-lane state*: each lane carries its own ``NetState`` (membrane state,
+delay ring, **plastic weights**, STDP/homeostasis traces), its own
+counter-keyed generator stream, and its own telemetry accumulators, so 64
+sessions advance one chunk in one ``lax.scan`` launch amortizing the
+weight-image decode and scheduling overhead across the fleet
+(``benchmarks/bench_serve.py``).
+
+Lanes are *slots*: :meth:`LaneScheduler.admit` writes a session into a
+free lane, :meth:`LaneScheduler.evict` slices its live state back out
+(bit-exactly resumable as a solo :class:`~repro.serve.Session` or on
+another scheduler), :meth:`LaneScheduler.step` advances every lane one
+chunk. Idle lanes stay in the program but are gated by the per-lane
+``active`` flag: their generator draw is suppressed (no stimulus → the
+network relaxes to rest and emits no spike events, so every event-driven
+term — propagation drive, STDP deltas — is arithmetic on zeros) and
+homeostasis holds (otherwise an idle lane's below-target average rate
+would quietly inflate its plastic weights). Host memory per chunk is O(1)
+in the horizon: ``step`` runs ``record="monitors"`` (or ``"none"``) — no
+[T, N] raster is ever materialized; telemetry crosses to the host only on
+:meth:`flush`.
+
+Lane occupancy and per-session bytes are registered in the network's
+:class:`~repro.memory.MemoryLedger` under a dedicated "8. Serve Lanes"
+stage, extending the paper's seven-step ramp-up table to the serving
+deployment (``MemoryLedger.serve_bytes``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import _run_impl
+from repro.core.network import CompiledNetwork, NetState
+from repro.precision.policy import tree_bytes
+from repro.telemetry import monitors as tel
+
+__all__ = ["LaneScheduler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class _LaneInfo:
+    """Host-side bookkeeping for one occupied lane."""
+
+    session_id: str
+    ticks: int = 0
+
+
+class Evicted(NamedTuple):
+    """What :meth:`LaneScheduler.evict` hands back — everything needed to
+    resume the tenant bit-exactly elsewhere (``Session.create(net,
+    key=ev.gen_key, state=ev.state)`` or a re-admit)."""
+
+    state: NetState
+    gen_key: jax.Array  # the tenant's stimulus-stream key
+    flush: dict | None  # final telemetry drain (None for record="none")
+
+
+def _stack(tree, n: int):
+    return jax.tree.map(lambda x: jnp.stack([x] * n), tree)
+
+
+@jax.jit
+def _write_lane(batched, lane, value):
+    return jax.tree.map(lambda b, x: b.at[lane].set(x), batched, value)
+
+
+@jax.jit
+def _read_lane(batched, lane):
+    return jax.tree.map(lambda b: b[lane], batched)
+
+
+class LaneScheduler:
+    """Admit/evict/step scheduler over ``capacity`` vmap lanes.
+
+    All admitted sessions must share the scheduler's compiled network
+    (same topology, params, and precision policy — that is what lets one
+    device program serve them all). ``record`` selects the per-chunk mode:
+    ``"monitors"`` (default; requires compiled monitors) accumulates
+    flushable telemetry per lane, ``"none"`` runs bare.
+    """
+
+    def __init__(self, net: CompiledNetwork, capacity: int, *,
+                 record: str = "monitors"):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if record not in ("monitors", "none"):
+            raise ValueError(
+                f"record must be 'monitors' or 'none', got {record!r} — "
+                "raster modes would materialize [T, N] per lane")
+        if record == "monitors" and not net.static.monitors:
+            raise ValueError(
+                "record='monitors' needs a network compiled with monitors")
+        self.net = net
+        self.capacity = capacity
+        self.record = record
+        # Per-lane event gating (lax.cond) lowers to both-branches+select
+        # under vmap, exactly as in Engine.run_batch — the batched program
+        # relies on silent lanes contributing zero *events*, not on
+        # skipping their ops.
+        self.static = dataclasses.replace(net.static, event_gated=False)
+        self.states: NetState = _stack(net.state0, capacity)
+        self.gen_keys = _stack(jax.random.key(0), capacity)
+        self.active = jnp.zeros((capacity,), bool)
+        self._tel = (_stack(tel.init_carry(net.static, 1), capacity)
+                     if record == "monitors" else ())
+        self._lanes: list[_LaneInfo | None] = [None] * capacity
+        self._ticks_since_flush = [0] * capacity
+        # Ledger: the serving deployment's footprint — per-lane replicated
+        # state (the dominant term: N× the single-tenant mutable state)
+        # plus the per-lane telemetry accumulators.
+        net.ledger.release("serve.lanes")
+        net.ledger.release("serve.telemetry")
+        with net.ledger.stage("8. Serve Lanes"):
+            net.ledger.register("serve.lanes", self.states)
+            if self._tel:
+                net.ledger.register("serve.telemetry", self._tel)
+
+    # -- occupancy ------------------------------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return sum(1 for s in self._lanes if s is not None)
+
+    @property
+    def free_lanes(self) -> list[int]:
+        return [i for i, s in enumerate(self._lanes) if s is None]
+
+    @property
+    def session_bytes(self) -> int:
+        """Device bytes one admitted session costs: its lane's replicated
+        NetState slice plus its telemetry accumulators."""
+        return (tree_bytes(self.states) + tree_bytes(self._tel)) // self.capacity
+
+    def lane_of(self, session_id: str) -> int:
+        for i, s in enumerate(self._lanes):
+            if s is not None and s.session_id == session_id:
+                return i
+        raise KeyError(session_id)
+
+    # -- admit / evict --------------------------------------------------------
+    def admit(self, session_id: str, *, seed: int | None = None,
+              key: jax.Array | None = None,
+              state: NetState | None = None) -> int:
+        """Place a session into a free lane; returns the lane index.
+
+        ``seed``/``key`` names the tenant's stimulus stream; when neither
+        is given the seed is ``crc32(session_id)`` — stable across
+        processes and restarts (NOT Python's salted ``hash``), so a
+        re-admitted tenant keeps its stream. ``state`` resumes an existing
+        session (an evicted lane, a solo ``Session.state``, or a restored
+        checkpoint) instead of the network's fresh ``state0``.
+        """
+        if not self.free_lanes:
+            raise RuntimeError(
+                f"scheduler full ({self.capacity} lanes) — evict before "
+                "admitting")
+        if any(s is not None and s.session_id == session_id
+               for s in self._lanes):
+            raise ValueError(f"session id {session_id!r} already admitted")
+        lane = self.free_lanes[0]
+        if key is None:
+            key = jax.random.key(seed if seed is not None else
+                                 zlib.crc32(session_id.encode()))
+        state = state if state is not None else self.net.state0
+        self.states = _write_lane(self.states, lane, state)
+        self.gen_keys = _write_lane(self.gen_keys, lane, key)
+        self.active = self.active.at[lane].set(True)
+        if self._tel:
+            self._tel = _write_lane(
+                self._tel, lane,
+                jax.tree.map(jnp.zeros_like, _read_lane(self._tel, lane)))
+        self._lanes[lane] = _LaneInfo(session_id=session_id,
+                                      ticks=int(state.t))
+        self._ticks_since_flush[lane] = 0
+        return lane
+
+    def evict(self, session_id: str) -> Evicted:
+        """Remove a session; returns its live ``NetState``, its stimulus
+        key, and the final telemetry flush (:class:`Evicted`).
+
+        State + key together resume bit-exactly anywhere — solo session,
+        re-admit, checkpoint; the lane goes idle (generator-gated silent)
+        until the next admit.
+        """
+        lane = self.lane_of(session_id)
+        state = _read_lane(self.states, lane)
+        gen_key = self.gen_keys[lane]
+        final = self.flush(session_id) if self._tel else None
+        self.active = self.active.at[lane].set(False)
+        self._lanes[lane] = None
+        return Evicted(state=state, gen_key=gen_key, flush=final)
+
+    # -- advance --------------------------------------------------------------
+    def step(self, n_ticks: int) -> None:
+        """Advance EVERY lane ``n_ticks`` in one vmapped device program.
+
+        O(1) host memory: nothing is fetched; per-lane state and telemetry
+        stay resident. Idle lanes ride along silenced (see module doc).
+        """
+        tel_in = (self._chunk_tel(n_ticks),) if self._tel else ()
+        out = _step_lanes(self.static, self.net.params, self.states,
+                          self.gen_keys, self.active, n_ticks, self.record,
+                          *tel_in)
+        if self._tel:
+            self.states, self._tel = out
+        else:
+            self.states = out
+        for i, info in enumerate(self._lanes):
+            if info is not None:
+                self._lanes[i] = dataclasses.replace(
+                    info, ticks=info.ticks + n_ticks)
+                self._ticks_since_flush[i] += n_ticks
+
+    def _chunk_tel(self, n_ticks: int) -> tuple:
+        """Per-step telemetry carry: cumulative slots persist (batched),
+        per-chunk slots (probe/snapshot buffers) re-init at this chunk's
+        shape."""
+        fresh = _stack(tel.init_carry(self.net.static, n_ticks),
+                       self.capacity)
+        return tuple(
+            c if isinstance(s, tel.CUMULATIVE) else f
+            for s, c, f in zip(self.net.static.monitors, self._tel, fresh)
+        )
+
+    # -- telemetry ------------------------------------------------------------
+    def flush(self, session_id: str) -> dict:
+        """Drain one session's cumulative telemetry to the host: per-group
+        spike counts since its last flush (lane accumulator re-zeroed) and
+        the current filtered group rates (filter level kept)."""
+        if not self._tel:
+            raise ValueError("scheduler built with record='none'")
+        lane = self.lane_of(session_id)
+        values, zeroed = tel.flush_carry(self.net.static,
+                                         _read_lane(self._tel, lane))
+        self._tel = _write_lane(self._tel, lane, zeroed)
+        values["n_ticks"] = self._ticks_since_flush[lane]
+        self._ticks_since_flush[lane] = 0
+        return values
+
+    def flush_all(self) -> dict[str, dict]:
+        return {s.session_id: self.flush(s.session_id)
+                for s in self._lanes if s is not None}
+
+
+@partial(jax.jit, static_argnames=("static", "n_ticks", "record"))
+def _step_lanes(static, params, states, gen_keys, active, n_ticks, record,
+                tel_carry=None):
+    """One chunk for every lane: vmap of the engine's ``_run_impl`` over
+    (state, gen stream, active flag, telemetry carry). Only carries come
+    back — per-chunk outputs (telemetry dicts the caller didn't ask for)
+    are dead code the jit eliminates."""
+
+    def one(state, key, act, tc):
+        final, out = _run_impl(
+            static, params, state, n_ticks, record=record,
+            gen_base=key, active=act,
+            tel_carry=tc if record == "monitors" else None,
+            return_tel_carry=record == "monitors")
+        if record == "monitors":
+            return final, out["tel_carry"]
+        return final
+
+    if record == "monitors":
+        return jax.vmap(one)(states, gen_keys, active, tel_carry)
+    return jax.vmap(lambda s, k, a: one(s, k, a, None))(
+        states, gen_keys, active)

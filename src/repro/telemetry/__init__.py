@@ -7,6 +7,7 @@ turns monitor output + a ``HardwareSpec`` into the paper's accuracy /
 real-time / energy numbers (driven by ``benchmarks/report.py``).
 """
 from repro.telemetry.monitors import (
+    CUMULATIVE,
     DEFAULT_MONITORS,
     GroupRate,
     MonitorSpec,
@@ -14,7 +15,9 @@ from repro.telemetry.monitors import (
     VoltageProbe,
     WeightNorm,
     carry_struct,
+    chunk_carry,
     collect,
+    flush_carry,
     init_carry,
     resolve,
     summarize,
@@ -23,6 +26,7 @@ from repro.telemetry.monitors import (
 from repro.telemetry import metrics
 
 __all__ = [
+    "CUMULATIVE",
     "DEFAULT_MONITORS",
     "GroupRate",
     "MonitorSpec",
@@ -30,7 +34,9 @@ __all__ = [
     "VoltageProbe",
     "WeightNorm",
     "carry_struct",
+    "chunk_carry",
     "collect",
+    "flush_carry",
     "init_carry",
     "metrics",
     "resolve",

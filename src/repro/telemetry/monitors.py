@@ -56,9 +56,12 @@ __all__ = [
     "VoltageProbe",
     "WeightNorm",
     "DEFAULT_MONITORS",
+    "CUMULATIVE",
     "resolve",
     "carry_struct",
     "init_carry",
+    "chunk_carry",
+    "flush_carry",
     "update",
     "collect",
     "summarize",
@@ -193,6 +196,69 @@ def init_carry(static, n_steps: int) -> tuple:
                 (n_snapshots(n_steps, s.stride), len(static.projections)),
                 jnp.float32))
     return tuple(out)
+
+
+# Monitor kinds whose accumulators are meaningful ACROSS runs: their carry
+# slots persist over chunked serving calls (``run(tel_carry=...)``) until a
+# host flush drains them. VoltageProbe emits per-tick ys and WeightNorm
+# keeps a per-run snapshot ring — both are per-chunk outputs, re-initialized
+# every call (their buffer shapes depend on the call's n_steps).
+CUMULATIVE = (SpikeCount, GroupRate)
+
+
+def chunk_carry(static, carry: tuple | None, n_steps: int) -> tuple:
+    """Telemetry carry for the next chunked call of ``n_steps`` ticks:
+    cumulative slots resume from ``carry`` (zeroed when ``None`` — a fresh
+    session), per-chunk slots (probe/snapshot buffers) are re-initialized
+    at the chunk size. This is what ``repro.serve`` feeds to
+    ``run(tel_carry=...)``."""
+    fresh = init_carry(static, n_steps)
+    if carry is None:
+        return fresh
+    return tuple(
+        c if isinstance(s, CUMULATIVE) else f
+        for s, c, f in zip(static.monitors, carry, fresh)
+    )
+
+
+def flush_carry(static, carry: tuple) -> tuple[dict, tuple]:
+    """Drain the cumulative accumulators to the host; returns
+    ``(host_values, carry')`` (per-chunk slots pass through untouched).
+
+    ``host_values`` maps monitor name → numpy array of per-group values —
+    the same per-group reductions :func:`collect` runs post-scan. The two
+    cumulative kinds drain differently, by what they *are*:
+
+    * ``SpikeCount`` is a windowed sum: flushed counts are exact per-group
+      totals **since the previous flush**, and the slot re-zeros on device
+      — summing flushes over a chunk sequence equals the uninterrupted
+      run's totals bit-for-bit.
+    * ``GroupRate`` is an exponential-filter *level*, not an accumulation:
+      the flush reports its current per-group value and the filter state
+      is KEPT (zeroing it would restart the EMA from 0 and bias every
+      post-flush reading low by ~(1 − e^(−window/τ)) — readings would
+      diverge from an uninterrupted run's, breaking the serving
+      invariance).
+
+    Cost is O(N) per flush, independent of how many ticks elapsed — the
+    periodic host sync of an unbounded serving session.
+    """
+    out: dict = {}
+    new = []
+    for s, c in zip(static.monitors, carry):
+        if isinstance(s, SpikeCount):
+            out[s.name] = np.asarray(jnp.stack([
+                c[g.start:g.start + g.size].sum() for g in static.groups
+            ]))
+            new.append(jnp.zeros_like(c))
+        elif isinstance(s, GroupRate):
+            out[s.name] = np.asarray(jnp.stack([
+                c[g.start:g.start + g.size].mean() for g in static.groups
+            ]))
+            new.append(c)  # filter level persists — see docstring
+        else:
+            new.append(c)
+    return out, tuple(new)
 
 
 def update(static, carry: tuple, i: jax.Array, spikes: jax.Array,

@@ -25,8 +25,14 @@ from repro.core import Engine
 
 
 def main() -> None:
-    # fp16 = the paper's MCU policy; the ledger enforces the 8.477 MB budget.
-    net = build_synfire(SYNFIRE4, policy="fp16")
+    # fp16 = the paper's MCU policy; the ledger enforces the 8.477 MB
+    # budget. backend="fused" runs the whole tick as ONE dispatch — the
+    # bucket matmuls collapse into per-shape-class batched contractions
+    # (and, on TPU, into a single Pallas megakernel tick) — and is
+    # bit-identical to the default XLA path (tests/test_fused.py); the
+    # loop -> packed -> sparse -> fused trajectory is tracked in
+    # BENCH_engine.json.
+    net = build_synfire(SYNFIRE4, policy="fp16", backend="fused")
     print(f"Synfire4: {net.n_neurons} neurons, {net.n_synapses} synapses, "
           f"policy={net.policy.name}")
     print(net.ledger.format_table())

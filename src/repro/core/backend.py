@@ -65,6 +65,8 @@ on Synfire4-mini in both storage policies.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
@@ -85,8 +87,11 @@ from repro.kernels.syn_matmul import syn_matmul
 
 __all__ = [
     "assemble_packed",
+    "assemble_fused",
+    "FusedPayload",
     "update_neurons_dispatch",
     "propagate_packed",
+    "propagate_fused",
     "plastic_drive",
     "stdp_dispatch",
 ]
@@ -292,13 +297,13 @@ def propagate_packed(static, params, state, spikes, ring, t, packed):
              b.delay_ms, b.channel, b.post_start, params.bucket_post_ids[bi])
 
     # 2. per-projection fallback: plastic / STP projections (weights change
-    #    every tick, so they cannot live in the hoisted packed image).
-    #    Plastic non-STP projections run the fan-in-row drive over their
-    #    compile-time idx table — O(post × fanin) for either storage, and
-    #    the shared row arithmetic is what keeps dense- and CSR-stored
-    #    plastic runs bit-identical. STP projections keep the dense matmul
-    #    (their per-pre u·x scaling rides the spike row either way; CSR
-    #    storage for STP is out of scope).
+    #    every tick, so they cannot live in the hoisted packed image). Both
+    #    run the fan-in-row drive over their compile-time idx table —
+    #    O(post × fanin) for either storage, and the shared row arithmetic
+    #    is what keeps dense- and CSR-stored plastic runs bit-identical.
+    #    STP projections are CSR-stored in every non-loop mode: the per-pre
+    #    u·x scale is applied to the spike row *before* the gather, so the
+    #    old dense matmul fallback is gone from the hot loop entirely.
     new_stp = []
     for j, (spec, w, stp_state) in enumerate(
             zip(static.projections, state.weights, state.stp)):
@@ -309,12 +314,8 @@ def propagate_packed(static, params, state, spikes, ring, t, packed):
         if stp_state is not None and spec.stp is not None:
             pre_sp = pre_sp * (stp_state.u * stp_state.x)
         channel = 0 if (not coba or spec.receptor == "exc") else 1
-        if params.proj_csr_idx[j] is not None:
-            fn = (lambda pre_sp=pre_sp, w=w, j=j, spec=spec:
-                  plastic_drive(static, params, j, spec, w, pre_sp))
-        else:
-            fn = lambda pre_sp=pre_sp, w=w: _matmul(static, pre_sp,
-                                                    w.astype(f32))
+        fn = (lambda pre_sp=pre_sp, w=w, j=j, spec=spec:
+              plastic_drive(static, params, j, spec, w, pre_sp))
         emit(fn,
              spikes[spec.pre_slice].any() if static.event_gated else None,
              spec.delay_ms, channel, spec.post_start, None)
@@ -336,6 +337,206 @@ def propagate_packed(static, params, state, spikes, ring, t, packed):
         row = row + acc[d].astype(ring.dtype)
         ring = jax.lax.dynamic_update_index_in_dim(ring, row, slot, axis=0)
     return ring, tuple(new_stp)
+
+
+class FusedPayload(NamedTuple):
+    """Hoisted loop-invariant payloads for ``backend="fused"``.
+
+    ``packed`` is the per-bucket f32 payload tuple (same as
+    :func:`assemble_packed`); ``class_w`` stacks each multi-member dense
+    shape class into one ``[B, P, Q]`` batch operand (``None`` for
+    singleton classes, which keep the plain per-bucket dot); ``kernel``
+    carries the Pallas megakernel's streamed operands + tile schedule
+    when ``static.fused_kernel`` engages (else ``None``)."""
+
+    packed: tuple[jax.Array, ...]
+    class_w: tuple[jax.Array | None, ...]
+    kernel: object | None = None
+
+
+def assemble_fused(static, weights, params=None) -> FusedPayload:
+    """Assemble the fused-tick payloads (decode + batching hoisted).
+
+    Reuses the packed bucket images, then stacks same-shape dense buckets
+    so the tick issues ONE batched contraction per shape class instead of
+    one matmul per bucket — the op-count collapse that buys the fused
+    speedup on dispatch-bound hosts.  With ``params`` given and
+    ``static.fused_kernel`` set, also builds the megakernel payload
+    (stacked weight tiles, globalized CSR tables, tile schedule)."""
+    packed = assemble_packed(static, weights)
+    class_w: list[jax.Array | None] = []
+    for _, bids in static.fused.dense_classes:
+        if len(bids) == 1:
+            class_w.append(None)
+        else:
+            class_w.append(jnp.stack([packed[bi] for bi in bids]))
+    kernel = None
+    if static.fused_kernel and params is not None:
+        from repro.kernels.fused_tick import assemble_kernel
+        kernel = assemble_kernel(static, params, packed)
+    return FusedPayload(packed=packed, class_w=tuple(class_w),
+                        kernel=kernel)
+
+
+def _bucket_pre(static, params, spikes_f32, bi):
+    b = static.buckets[bi]
+    if b.pre_start >= 0:
+        return spikes_f32[b.pre_start:b.pre_start + b.p]
+    return spikes_f32[params.bucket_pre_ids[bi]]
+
+
+def propagate_fused(static, params, state, spikes, ring, t, payload):
+    """One-dispatch expression of the tick's whole propagation phase.
+
+    Same plan, same arithmetic as :func:`propagate_packed`, restructured
+    by gating regime:
+
+    * ``event_gated`` (sequential B=1 runs): per-bucket ``lax.cond``
+      gating is kept — it is packed's real win (only the wavefront's
+      bucket computes each tick) — but each cond now returns the small
+      ``[Q]`` drive instead of threading the full ``[N, C]`` accumulator
+      through both branches, and the accumulator add runs
+      unconditionally.  Skipping a silent source is bitwise neutral: its
+      contribution is exact ±0, and IEEE ``(+0) + (±0) = +0`` keeps the
+      accumulator rows identical.
+    * ungated (``vmap`` / ``run_batch``, where ``cond`` degenerates to
+      ``select`` and both branches run anyway): dense buckets with the
+      same ``[P, Q]`` shape run as ONE batched ``dot_general`` over
+      stacked images (``FusedPayload.class_w``) into one ``[K, N, C]``
+      accumulator (K = distinct delays); batching changes which *kernel*
+      computes each row, not the order of adds within a row, so
+      exactly-representable weight tables stay bit-identical (asserted
+      across the whole parity matrix).
+
+    Both regimes land contributions in plan-then-projection order and
+    commit with the same per-delay ring writes as packed — the Pallas
+    kernel epilogue mirrors this exactly.  Plastic / STP projections
+    reuse :func:`plastic_drive` verbatim (same expression tree ⇒
+    bit-identical even off the representable grid).  Returns
+    ``(ring', new_stp)``.
+    """
+    f32 = jnp.float32
+    plan = static.fused
+    coba = static.ring_channels == 2
+    delays = plan.delays
+    K = len(delays)
+    if K == 0:  # no projections: nothing to propagate
+        return ring, tuple(None for _ in static.projections)
+    kpos = {d: k for k, d in enumerate(delays)}
+
+    def gated_acc():
+        spikes_f32 = spikes.astype(f32)
+        acc: dict[int, jax.Array] = {}
+
+        def emit(fn, pred, q, delay_ms, channel, post_start, post_ids):
+            drive = jax.lax.cond(pred, fn, lambda: jnp.zeros((q,), f32))
+            drive = jnp.abs(drive) if coba else drive
+            a = acc.get(delay_ms)
+            if a is None:
+                a = jnp.zeros((static.n, static.ring_channels), f32)
+            if post_start >= 0:
+                acc[delay_ms] = a.at[post_start:post_start + q,
+                                     channel].add(drive)
+            else:
+                acc[delay_ms] = a.at[post_ids, channel].add(drive)
+
+        for bi, b in enumerate(static.buckets):
+            pre = _bucket_pre(static, params, spikes_f32, bi)
+            if b.kind == "sparse":
+                fn = (lambda pre=pre, bi=bi:
+                      _gather(static, pre, params.bucket_csr_idx[bi],
+                              payload.packed[bi]))
+            else:
+                fn = (lambda pre=pre, bi=bi:
+                      _matmul(static, pre, payload.packed[bi]))
+            emit(fn, pre.any(), b.q, b.delay_ms, b.channel, b.post_start,
+                 params.bucket_post_ids[bi])
+        for j, (spec, w, stp_state) in enumerate(
+                zip(static.projections, state.weights, state.stp)):
+            if not (spec.plastic or spec.stp is not None):
+                continue
+            pre_sp = spikes_f32[spec.pre_slice]
+            if stp_state is not None and spec.stp is not None:
+                pre_sp = pre_sp * (stp_state.u * stp_state.x)
+            channel = 0 if (not coba or spec.receptor == "exc") else 1
+            fn = (lambda pre_sp=pre_sp, w=w, j=j, spec=spec:
+                  plastic_drive(static, params, j, spec, w, pre_sp))
+            emit(fn, spikes[spec.pre_slice].any(), spec.post_size,
+                 spec.delay_ms, channel, spec.post_start, None)
+        return acc
+
+    def compute(_):
+        spikes_f32 = spikes.astype(f32)
+        drives: dict[int, jax.Array] = {}
+        for ci, (_, bids) in enumerate(plan.dense_classes):
+            if payload.class_w[ci] is None:
+                bi = bids[0]
+                drives[bi] = _matmul(
+                    static, _bucket_pre(static, params, spikes_f32, bi),
+                    payload.packed[bi])
+                continue
+            rows = []
+            for bi in bids:
+                b = static.buckets[bi]
+                rows.append(jnp.arange(b.pre_start, b.pre_start + b.p)
+                            if b.pre_start >= 0 else params.bucket_pre_ids[bi])
+            x = spikes_f32[jnp.stack(rows)]  # [B, P] one gather per class
+            out = jax.lax.dot_general(
+                x[:, None, :], payload.class_w[ci],
+                dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=f32)  # [B, 1, Q]
+            for bpos, bi in enumerate(bids):
+                drives[bi] = out[bpos, 0]
+        for bi in plan.sparse_ids:
+            drives[bi] = _gather(
+                static, _bucket_pre(static, params, spikes_f32, bi),
+                params.bucket_csr_idx[bi], payload.packed[bi])
+
+        acc = jnp.zeros((K, static.n, static.ring_channels), f32)
+        # Bucket contributions land in PLAN order, then plastic/STP in
+        # projection order — the exact per-delay accumulation order of
+        # propagate_packed, so overlapping post spans sum identically.
+        for bi, b in enumerate(static.buckets):
+            contrib = jnp.abs(drives[bi]) if coba else drives[bi]
+            k = kpos[b.delay_ms]
+            if b.post_start >= 0:
+                acc = acc.at[k, b.post_start:b.post_start + b.q,
+                             b.channel].add(contrib)
+            else:
+                acc = acc.at[k, params.bucket_post_ids[bi],
+                             b.channel].add(contrib)
+        for j, (spec, w, stp_state) in enumerate(
+                zip(static.projections, state.weights, state.stp)):
+            if not (spec.plastic or spec.stp is not None):
+                continue
+            pre_sp = spikes_f32[spec.pre_slice]
+            if stp_state is not None and spec.stp is not None:
+                pre_sp = pre_sp * (stp_state.u * stp_state.x)
+            contrib = plastic_drive(static, params, j, spec, w, pre_sp)
+            contrib = jnp.abs(contrib) if coba else contrib
+            channel = 0 if (not coba or spec.receptor == "exc") else 1
+            acc = acc.at[kpos[spec.delay_ms],
+                         spec.post_start:spec.post_start + spec.post_size,
+                         channel].add(contrib)
+        return acc
+
+    if static.event_gated:
+        acc_by_delay = gated_acc()
+    else:
+        acc = compute(None)
+        acc_by_delay = {d: acc[k] for k, d in enumerate(delays)}
+
+    for d in sorted(acc_by_delay):
+        slot = jnp.mod(t + d, static.ring_len)
+        row = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
+        row = row + acc_by_delay[d].astype(ring.dtype)
+        ring = jax.lax.dynamic_update_index_in_dim(ring, row, slot, axis=0)
+
+    new_stp = tuple(
+        stp_update(spec.stp, st, spikes[spec.pre_slice], static.dt)
+        if st is not None else None
+        for spec, st in zip(static.projections, state.stp))
+    return ring, new_stp
 
 
 def stdp_dispatch(static, cfg, tr, w, mask, pre_sp, post_sp, idx=None):

@@ -81,6 +81,7 @@ import jax.numpy as jnp
 
 from repro.core import backend as be
 from repro.core import neurons as nrn
+from repro.kernels import ops as kops
 from repro.telemetry import monitors as tel
 from repro.core.conductance import coba_current, decay_and_deliver
 from repro.core.network import CompiledNetwork, NetParams, NetState, NetStatic
@@ -129,6 +130,16 @@ def step(
     """
     f32 = jnp.float32
     t = state.t
+    if (static.fused_kernel and i_ext is None
+            and (gen_u is not None or static.n_gen == 0)):
+        # Megakernel tick: phases 1–5 run as ONE Pallas program (ring
+        # read/zero, IZH4, generator merge, tiled propagation, ring
+        # commits) with the neuron/ring state VMEM-resident and weight
+        # tiles streamed.  fused_kernel implies no plasticity/STP/COBA,
+        # so phase 6 and the STP updates are vacuous.
+        if packed is None:
+            packed = be.assemble_fused(static, state.weights, params)
+        return _step_kernel(static, params, state, packed, gen_u)
     if gen_u is None and static.n_gen > 0:
         key, k_gen = jax.random.split(state.key)
     else:
@@ -188,13 +199,21 @@ def step(
             off += sz
 
     # 5: propagation into future ring slots ("packed"/"sparse"/"auto" all
-    # run the bucket plan; a bucket's kind selects matmul vs CSR gather)
+    # run the bucket plan; a bucket's kind selects matmul vs CSR gather;
+    # backend="fused" collapses the whole plan into one gated dispatch)
     if static.propagation != "loop":
-        if packed is None:
-            packed = be.assemble_packed(static, state.weights)
-        ring, new_stp = be.propagate_packed(
-            static, params, state, spikes, ring, t, packed
-        )
+        if static.backend == "fused":
+            if packed is None:
+                packed = be.assemble_fused(static, state.weights, params)
+            ring, new_stp = be.propagate_fused(
+                static, params, state, spikes, ring, t, packed
+            )
+        else:
+            if packed is None:
+                packed = be.assemble_packed(static, state.weights)
+            ring, new_stp = be.propagate_packed(
+                static, params, state, spikes, ring, t, packed
+            )
         new_stp = list(new_stp)
     else:
         ring, new_stp = _propagate_loop(static, state, spikes, ring, t)
@@ -236,6 +255,49 @@ def step(
         spikes=spikes, v=new_neurons.v.astype(f32), i_syn=i_syn
     )
     return new_state, out
+
+
+def _step_kernel(static, params, state, payload, gen_u):
+    """One tick via the fused Pallas megakernel (``static.fused_kernel``).
+
+    The generator compare runs outside the kernel (same expression as the
+    packed path's phase 4, vectorized over the spans into one [N] bool
+    row) and the refractory countdown outside too (identically zero for
+    the IZH4-only nets the kernel accepts — kept for NetState parity);
+    everything else — ring read/zero, IZH4, spike merge, propagation,
+    ring commits — is the single Pallas program.  Bit-identical to the
+    ``backend="xla"`` tick across the whole parity matrix (asserted in
+    tests), because every padded contribution is an exact ``+0.0`` and
+    the shared weight tables are exactly representable.
+    """
+    f32 = jnp.float32
+    t = state.t
+    gen_row = jnp.zeros((static.n,), bool)
+    if static.n_gen > 0:
+        t_ms = t.astype(f32) * static.dt
+        off = 0
+        for g0, sz in static.gen_spans:
+            seg = slice(g0, g0 + sz)
+            in_pulse = t_ms < params.gen_until[seg]
+            rate = jnp.where(in_pulse, params.gen_rate[seg],
+                             params.gen_rate_after[seg])
+            gsp = gen_u[off:off + sz] < rate * (static.dt / 1000.0)
+            gen_row = gen_row.at[g0:g0 + sz].set(gsp)
+            off += sz
+    p = params.neuron
+    is_gen = p.model == nrn.NeuronModel.GENERATOR
+    v, u, spikes, ring2, i_syn = kops.fused_tick(
+        static, state.neurons.v, state.neurons.u, state.ring[:, :, 0],
+        gen_row, is_gen, p.a, p.b, p.c, p.d, t, payload.kernel)
+    refrac = jnp.maximum(state.neurons.refrac - 1, 0).astype(jnp.int16)
+    new_state = NetState(
+        t=t + 1, key=state.key,
+        neurons=nrn.NeuronState(v=v, u=u, refrac=refrac),
+        ring=ring2[:, :, None], weights=state.weights, stp=state.stp,
+        stdp=state.stdp, cond=state.cond, homeo=state.homeo,
+    )
+    return new_state, StepOutput(spikes=spikes, v=v.astype(f32),
+                                 i_syn=i_syn)
 
 
 def _propagate_loop(static, state, spikes, ring, t):
@@ -384,11 +446,12 @@ def _run_impl(
     # Hoist the bucket weight-payload assembly (+ fp16 -> f32 decode) out
     # of the tick scan: non-plastic weights are loop-invariant, so the scan
     # body closes over the decoded images / CSR rows as constants.
-    packed = (
-        be.assemble_packed(static, state.weights)
-        if static.propagation != "loop"
-        else None
-    )
+    if static.propagation == "loop":
+        packed = None
+    elif static.backend == "fused":
+        packed = be.assemble_fused(static, state.weights, params)
+    else:
+        packed = be.assemble_packed(static, state.weights)
 
     # Pre-draw all generator uniforms in one vectorized call outside the
     # scan (threefry on [T, n_gen] at once instead of a small per-tick draw

@@ -52,7 +52,7 @@ from repro.precision import PrecisionPolicy, get_policy
 from repro.telemetry import monitors as telem
 
 __all__ = ["NetworkBuilder", "CompiledNetwork", "NetStatic", "NetParams",
-           "NetState", "BucketSpec"]
+           "NetState", "BucketSpec", "FusedPlan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +97,76 @@ class BucketSpec:
     members: tuple[tuple[int, int, int], ...]  # (proj_idx, row0, col0)
     kind: str = "dense"  # "dense" (matmul) | "sparse" (CSR gather)
     fanin: int = 0  # CSR row width (sparse buckets only)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPlan:
+    """Compile-time tile plan for ``backend="fused"`` (one program per tick).
+
+    The packed bucket plan is reused as the tile schedule: dense buckets
+    with identical ``[P, Q]`` geometry fuse into one batched contraction
+    (``dense_classes``), CSR buckets stream their fan-in rows, and the
+    distinct ``delays`` drive the single ring-commit epilogue. ``tile_q`` /
+    ``tile_r`` size the weight / CSR tiles the Pallas kernel streams
+    through VMEM (each double-buffered tile stays under
+    ``_VMEM_TILE_BYTES`` so two in-flight buffers plus the resident
+    neuron state fit comfortably in a 16 MB VMEM)."""
+
+    delays: tuple[int, ...]  # sorted distinct ring delays committed per tick
+    # ((p, q), bucket_ids): dense buckets sharing a [P, Q] shape, batched
+    # into one dot_general on the XLA path / one tile run on the kernel.
+    dense_classes: tuple[tuple[tuple[int, int], tuple[int, ...]], ...]
+    sparse_ids: tuple[int, ...]  # bucket indices executed as CSR gathers
+    # True when the whole tick lowers to the single Pallas program
+    # (IZH4+generators only, CUBA, euler, no plasticity/STP, contiguous
+    # bucket spans).
+    kernel_ok: bool
+    tile_q: int = 128  # weight-tile columns streamed per grid step
+    tile_r: int = 128  # CSR rows streamed per grid step
+
+
+# VMEM budget per streamed tile buffer: double-buffering means two of
+# these are in flight while the resident state (ring, v/u, traces) holds
+# the rest of the ~16 MB VMEM.
+_VMEM_TILE_BYTES = 512 * 1024
+
+
+def _plan_fused(
+    buckets: tuple[BucketSpec, ...],
+    specs: tuple["ProjectionSpec", ...],
+    channels: int,
+    izh4_only: bool,
+    method: str,
+) -> FusedPlan:
+    delays = sorted({b.delay_ms for b in buckets} | {
+        s.delay_ms for s in specs if s.plastic or s.stp is not None
+    })
+    classes: dict[tuple[int, int], list[int]] = {}
+    sparse_ids: list[int] = []
+    for bi, b in enumerate(buckets):
+        if b.kind == "sparse":
+            sparse_ids.append(bi)
+        else:
+            classes.setdefault((b.p, b.q), []).append(bi)
+    spans_ok = all(b.pre_start >= 0 and b.post_start >= 0 for b in buckets)
+    kernel_ok = (
+        channels == 1 and izh4_only and method == "euler" and spans_ok
+        and not any(s.plastic or s.stp is not None for s in specs)
+    )
+    # Tile geometry: the widest streamed buffer must fit _VMEM_TILE_BYTES.
+    p_pad = max((-(-b.p // 8) * 8 for b in buckets if b.kind == "dense"),
+                default=8)
+    f_pad = max((max(b.fanin, 1) for b in buckets if b.kind == "sparse"),
+                default=1)
+    tile_q = max(128, _VMEM_TILE_BYTES // (p_pad * 4) // 128 * 128)
+    tile_r = max(8, _VMEM_TILE_BYTES // (f_pad * 8) // 8 * 8)
+    return FusedPlan(
+        delays=tuple(delays),
+        dense_classes=tuple((pq, tuple(ids)) for pq, ids in classes.items()),
+        sparse_ids=tuple(sparse_ids),
+        kernel_ok=kernel_ok,
+        tile_q=int(tile_q), tile_r=int(tile_r),
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,7 +215,7 @@ class NetStatic:
     stdp: tuple[STDPConfig | None, ...]  # aligned with projections
     coba: COBAConfig | None = None
     # -- execution strategy (see repro.core.backend) --------------------------
-    backend: str = "xla"  # "xla" | "pallas"
+    backend: str = "xla"  # "xla" | "pallas" | "fused"
     propagation: str = "packed"  # "packed" | "sparse" | "auto" | "loop"
     pallas_interpret: bool = True  # interpret-mode kernels (CPU containers)
     izh4_only: bool = False  # network is IZH4 + generators only (kernel-able)
@@ -156,6 +226,18 @@ class NetStatic:
     # "auto"). They never join buckets (their weights mutate every tick);
     # the engine's per-projection plasticity/drive paths key off this.
     plastic_csr: tuple[int, ...] = ()
+    # STP projections are *always* CSR-stored in non-loop modes: the
+    # per-pre u·x scaling is gather-compatible (scale the pre spike row,
+    # then gather), so the fan-in-row drive subsumes the old dense matmul
+    # fallback and the fused kernel never needs one. Loop mode keeps
+    # dense storage (it is the semantic oracle, kept verbatim).
+    stp_csr: tuple[int, ...] = ()
+    # Compile-time tile plan for backend="fused" (None otherwise).
+    fused: FusedPlan | None = None
+    # True when the fused tick runs as ONE Pallas program (TPU, or
+    # REPRO_PALLAS_INTERPRET=1 forcing interpret mode); False falls back
+    # to the single-dispatch XLA expression of the same plan.
+    fused_kernel: bool = False
     # Compiled in-scan monitor specs (repro.telemetry); the engine lowers
     # them into scan-carry accumulators when run(record="monitors"/"both").
     monitors: tuple[telem.MonitorSpec, ...] = ()
@@ -183,11 +265,11 @@ class NetStatic:
     @property
     def csr_projs(self) -> frozenset[int]:
         """Projection indices whose weights are stored CSR ``[post, fanin]``
-        (members of sparse buckets plus ``plastic_csr``) rather than dense
-        ``[pre, post]``."""
+        (members of sparse buckets plus ``plastic_csr`` plus ``stp_csr``)
+        rather than dense ``[pre, post]``."""
         return frozenset(
             m[0] for b in self.buckets if b.kind == "sparse" for m in b.members
-        ) | frozenset(self.plastic_csr)
+        ) | frozenset(self.plastic_csr) | frozenset(self.stp_csr)
 
     def group(self, name: str) -> GroupSpec:
         for g in self.groups:
@@ -336,10 +418,15 @@ class NetworkBuilder:
         pack_density: float = 0.5,
         homeostasis_period: int = 0,
     ) -> "CompiledNetwork":
-        if backend not in ("xla", "pallas"):
+        if backend not in ("xla", "pallas", "fused"):
             raise ValueError(f"unknown backend {backend!r}")
         if propagation not in ("packed", "sparse", "auto", "loop"):
             raise ValueError(f"unknown propagation {propagation!r}")
+        if backend == "fused" and propagation == "loop":
+            raise ValueError(
+                "backend='fused' fuses the bucketed tick — it has no "
+                "per-projection loop expression; use propagation="
+                "'packed'/'sparse'/'auto'")
         if any(c.homeostasis is not None for c in self._connects):
             if homeostasis_period < 1:
                 raise ValueError(
@@ -431,9 +518,17 @@ class NetworkBuilder:
             and (propagation == "sparse"
                  or (propagation == "auto" and _csr_wins(s)))
         ))
+        # STP projections go CSR in *every* non-loop mode: their per-pre
+        # u·x scale composes with the fan-in gather (scale the pre spike
+        # row, then gather), so the drive shares the plastic fan-in-row
+        # path and the dense matmul fallback is gone from the hot loop.
+        stp_csr = tuple(sorted(
+            j for j, s in enumerate(specs)
+            if s.stp is not None and propagation != "loop"
+        ))
         csr_set = frozenset(
             m[0] for b in buckets if b.kind == "sparse" for m in b.members
-        ) | frozenset(plastic_csr)
+        ) | frozenset(plastic_csr) | frozenset(stp_csr)
         csr: dict[int, CSRFanin] = {
             j: dense_to_csr(projs[j].mask, projs[j].weight,
                             fanin=specs[j].fanin, storage_dtype=wdt)
@@ -566,6 +661,19 @@ class NetworkBuilder:
             | (model_codes == int(nrn.NeuronModel.IZH4))
         ))
 
+        fused = None
+        fused_kernel = False
+        if backend == "fused":
+            from repro.kernels.ops import env_interpret, on_tpu
+
+            fused = _plan_fused(buckets, tuple(specs), channels,
+                                izh4_only, method)
+            # The Pallas program engages on TPU (native lowering) or when
+            # CI forces interpret execution; the default CPU container
+            # takes the single-dispatch XLA expression of the same plan.
+            fused_kernel = fused.kernel_ok and (
+                on_tpu() or bool(env_interpret()))
+
         static = NetStatic(
             n=n, ring_len=ring_len, ring_channels=channels, dt=dt,
             substeps=substeps, method=method, policy_name=policy.name,
@@ -573,7 +681,8 @@ class NetworkBuilder:
             coba=conductances,
             backend=backend, propagation=propagation,
             pallas_interpret=pallas_interpret, izh4_only=izh4_only,
-            buckets=buckets, plastic_csr=plastic_csr, monitors=mon_specs,
+            buckets=buckets, plastic_csr=plastic_csr, stp_csr=stp_csr,
+            fused=fused, fused_kernel=fused_kernel, monitors=mon_specs,
             homeo=tuple(homeo_cfgs), homeo_period=int(homeostasis_period),
         )
         params = NetParams(

@@ -1,0 +1,323 @@
+"""Pallas megakernel: ONE program per simulation tick.
+
+The per-tick phases the engine otherwise dispatches separately — delay-ring
+read + slot zeroing, IZH4 integration, generator merge, bucketed synaptic
+propagation, ring commits — execute as a single Pallas program in which the
+ring, membrane state, and spike vector stay VMEM-resident for the whole
+tick while the weight / CSR tiles stream through double-buffered DMA (the
+standard Pallas grid pipeline: the next tile's copy overlaps the current
+tile's compute).
+
+Layout
+------
+Neuron-indexed vectors are ``[1, Np]`` rows (``Np`` = N padded to the
+128-lane width plus enough slack that every tile window stays in bounds);
+the ring is ``[L, Np]``.  Dense bucket images are stacked into one
+``[Bd, Pp, Qp]`` operand streamed in ``(1, Pp, tile_q)`` column tiles; CSR
+buckets concatenate their fan-in rows into ``[R, Fp]`` index/weight tables
+streamed in ``(tile_r, Fp)`` row tiles — the in-kernel ``take`` subsumes
+the standalone ``syn_gather`` lowering.  A scalar-prefetch schedule
+(``meta[i] = (kind, sel, pre_start, post_off, kpos, qt)``) drives both the
+BlockSpec index maps (which weight tile to DMA for grid step ``i``) and
+the in-kernel placement of each tile's drive.
+
+Grid step 0 runs the tick prologue (ring read → ``i_syn``, slot zeroing,
+IZH4 update, generator overrides, spike vector, accumulator clear); every
+step accumulates its tile's drive into the per-delay ``[K, Np]``
+accumulator; the final step runs the epilogue — one ring row
+read-add-write per DISTINCT delay, mirroring the packed path's commit
+exactly.
+
+Bitwise stance (same as the rest of ``kernels/``): padding rows/columns
+carry weight ``+0.0`` so their contributions are exact zeros, and the
+engine's accumulator cells are never ``-0.0`` — adding a padded tile is a
+bitwise no-op.  With the exactly-representable weight tables the Synfire
+configs use, any accumulation order gives the exact sum, so the kernel
+raster is bit-identical to the XLA fused/packed/sparse paths (asserted in
+``tests/test_backends.py``); goldens validate the kernel against the
+independent ``kernels.ref.fused_tick_ref`` oracle off the lane grid.
+
+Eligibility is compiled into ``NetStatic.fused_kernel``: IZH4+generators
+only, Euler, CUBA single-channel ring, no plasticity/STP, contiguous
+bucket spans — on TPU it engages natively; ``REPRO_PALLAS_INTERPRET=1``
+forces the interpreted kernel elsewhere (CI / goldens).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+SUBLANE = 8
+
+# meta column indices (schedule rows, scalar-prefetched to SMEM)
+_KIND, _SEL, _PRE, _POST, _KPOS, _QT = range(6)
+
+
+class KernelPayload(NamedTuple):
+    """Loop-invariant operands + compile-time geometry of the fused tick.
+
+    Built once per device program (``backend.assemble_fused``); the jnp
+    members are closed over by the scan body, the ints parameterize the
+    kernel trace."""
+
+    meta: jax.Array  # [n_steps, 6] int32 tile schedule (scalar prefetch)
+    w_stack: jax.Array  # [Bd, Pp, Qp] f32 stacked dense bucket images
+    csr_idx: jax.Array  # [R, Fp] int32 global fan-in ids (pad -> 0)
+    csr_w: jax.Array  # [R, Fp] f32 fan-in weights (pad -> +0.0)
+    n_steps: int
+    n_pad: int
+    p_pad: int
+    tile_q: int
+    tile_r: int
+    f_pad: int
+
+
+def _ceil_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def assemble_kernel(static, params, packed) -> KernelPayload:
+    """Build the kernel payload from the assembled bucket images.
+
+    Pure reshuffle of loop-invariant data (runs once per device program,
+    outside the tick scan): dense images pad into the ``[Bd, Pp, Qp]``
+    stack, CSR tables globalize their indices (``+ pre_start``) and pad
+    rows to the ``tile_r`` grid, and the tile schedule is laid out as one
+    int32 row per grid step."""
+    plan = static.fused
+    buckets = static.buckets
+    dense_ids = [bi for bi, b in enumerate(buckets) if b.kind == "dense"]
+    sparse_ids = [bi for bi, b in enumerate(buckets) if b.kind == "sparse"]
+    kpos = {d: k for k, d in enumerate(plan.delays)}
+    f32 = jnp.float32
+
+    # -- dense stack geometry --------------------------------------------
+    p_pad = _ceil_to(max((buckets[bi].p for bi in dense_ids), default=1),
+                     SUBLANE)
+    q_max = max((buckets[bi].q for bi in dense_ids), default=1)
+    tile_q = LANE * max(1, min(plan.tile_q // LANE, _ceil_to(q_max, LANE) // LANE))
+    q_pad = _ceil_to(q_max, tile_q)
+    n_qt = q_pad // tile_q
+    w_stack = jnp.zeros((max(1, len(dense_ids)), p_pad, q_pad), f32)
+    for pos, bi in enumerate(dense_ids):
+        b = buckets[bi]
+        w_stack = w_stack.at[pos, :b.p, :b.q].set(packed[bi])
+
+    # -- CSR row-tile geometry -------------------------------------------
+    f_pad = _ceil_to(
+        max((params.bucket_csr_idx[bi].shape[1] for bi in sparse_ids),
+            default=1), LANE)
+    tile_r = max(SUBLANE, min(_ceil_to(plan.tile_r, SUBLANE), 512))
+    row_blocks: list[jax.Array] = []
+    csr_meta: list[tuple[int, int]] = []  # (post_off, kpos) per row tile
+    for bi in sparse_ids:
+        b = buckets[bi]
+        idx = params.bucket_csr_idx[bi].astype(jnp.int32) + b.pre_start
+        w = packed[bi]
+        rows = _ceil_to(b.q, tile_r)
+        idx = jnp.pad(idx, ((0, rows - b.q), (0, f_pad - idx.shape[1])))
+        w = jnp.pad(w, ((0, rows - b.q), (0, f_pad - w.shape[1])))
+        row_blocks.append((idx, w))
+        for rt in range(rows // tile_r):
+            csr_meta.append((b.post_start + rt * tile_r, kpos[b.delay_ms]))
+    if row_blocks:
+        csr_idx = jnp.concatenate([ib for ib, _ in row_blocks])
+        csr_w = jnp.concatenate([wb for _, wb in row_blocks])
+    else:
+        csr_idx = jnp.zeros((tile_r, f_pad), jnp.int32)
+        csr_w = jnp.zeros((tile_r, f_pad), f32)
+
+    # -- tile schedule ----------------------------------------------------
+    meta: list[list[int]] = []
+    for pos, bi in enumerate(dense_ids):
+        b = buckets[bi]
+        for qt in range(n_qt):
+            meta.append([0, pos, b.pre_start, b.post_start + qt * tile_q,
+                         kpos[b.delay_ms], qt])
+    for rt, (post_off, k) in enumerate(csr_meta):
+        meta.append([1, rt, 0, post_off, k, 0])
+    if not meta:  # projection-free net: one no-op step (prologue+epilogue)
+        meta.append([-1, 0, 0, 0, 0, 0])
+
+    slack = max(p_pad, q_pad, tile_r, LANE)
+    n_pad = _ceil_to(static.n + slack, LANE)
+    return KernelPayload(
+        meta=jnp.asarray(np.asarray(meta, np.int32)),
+        w_stack=w_stack, csr_idx=csr_idx, csr_w=csr_w,
+        n_steps=len(meta), n_pad=n_pad, p_pad=p_pad,
+        tile_q=tile_q, tile_r=tile_r, f_pad=f_pad,
+    )
+
+
+def _tick_kernel(m_ref, t_ref, v_ref, u_ref, ring_ref, gen_ref, isg_ref,
+                 a_ref, b_ref, c_ref, d_ref, w_ref, ci_ref, cw_ref,
+                 vo_ref, uo_ref, so_ref, io_ref, ro_ref, acc_ref, *,
+                 ring_len: int, dt: float, substeps: int,
+                 delays: tuple[int, ...], n_steps: int, n_pad: int,
+                 p_pad: int, tile_q: int, tile_r: int):
+    f32 = jnp.float32
+    i = pl.program_id(0)
+    t = t_ref[0]
+
+    @pl.when(i == 0)
+    def _prologue():
+        slot = jax.lax.rem(t, ring_len)
+        ro_ref[...] = ring_ref[...]
+        row = pl.load(ring_ref, (pl.ds(slot, 1), pl.ds(0, n_pad)))
+        i_syn = row.astype(f32)
+        io_ref[...] = i_syn
+        pl.store(ro_ref, (pl.ds(slot, 1), pl.ds(0, n_pad)),
+                 jnp.zeros_like(row))
+        # IZH4 integration — identical expression tree to kernels.ref.
+        # izh4_ref / the engine fast path, so state dtypes round-trip
+        # bit-identically (f32 math, storage-dtype writeback).
+        v = v_ref[...].astype(f32)
+        u = u_ref[...].astype(f32)
+        a = a_ref[...]
+        b = b_ref[...]
+        c = c_ref[...]
+        d = d_ref[...]
+        h = dt / substeps
+        for _ in range(substeps):
+            dv = 0.04 * v * v + 5.0 * v + 140.0 - u + i_syn
+            du = a * (b * v - u)
+            v = v + h * dv
+            u = u + h * du
+        spiked = v >= 30.0
+        v = jnp.where(spiked, c, v)
+        u = jnp.where(spiked, u + d, u)
+        v1 = v.astype(vo_ref.dtype)
+        u1 = u.astype(uo_ref.dtype)
+        # Generator overrides in the engine's exact order (storage-dtype
+        # round-trip between the reset and the hold-at-rest writes).
+        isg = isg_ref[...]
+        vo_ref[...] = jnp.where(isg, c, v1.astype(f32)).astype(vo_ref.dtype)
+        uo_ref[...] = jnp.where(isg, 0.0, u1.astype(f32)).astype(uo_ref.dtype)
+        so_ref[...] = jnp.where(isg, gen_ref[...], spiked)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kind = m_ref[i, _KIND]
+
+    @pl.when(kind == 0)
+    def _dense_tile():
+        ps = m_ref[i, _PRE]
+        po = m_ref[i, _POST]
+        k = m_ref[i, _KPOS]
+        pre = pl.load(so_ref, (pl.ds(0, 1), pl.ds(ps, p_pad))).astype(f32)
+        drive = jax.lax.dot_general(
+            pre, w_ref[...][0], (((1,), (0,)), ((), ())),
+            preferred_element_type=f32)  # [1, tile_q]
+        cur = pl.load(acc_ref, (pl.ds(k, 1), pl.ds(po, tile_q)))
+        pl.store(acc_ref, (pl.ds(k, 1), pl.ds(po, tile_q)), cur + drive)
+
+    @pl.when(kind == 1)
+    def _csr_tile():
+        po = m_ref[i, _POST]
+        k = m_ref[i, _KPOS]
+        spk = so_ref[...][0].astype(f32)  # [Np] resident spike row
+        g = jnp.take(spk, ci_ref[...], axis=0)  # in-kernel gather
+        drive = (g * cw_ref[...]).sum(axis=1)  # [tile_r]
+        cur = pl.load(acc_ref, (pl.ds(k, 1), pl.ds(po, tile_r)))
+        pl.store(acc_ref, (pl.ds(k, 1), pl.ds(po, tile_r)),
+                 cur + drive[None])
+
+    @pl.when(i == n_steps - 1)
+    def _epilogue():
+        # Ring commit for every distinct delay — same read-add-write (in
+        # ring storage dtype) as the packed path's per-delay commits.
+        for k, dly in enumerate(delays):
+            dslot = jax.lax.rem(t + dly, ring_len)
+            rrow = pl.load(ro_ref, (pl.ds(dslot, 1), pl.ds(0, n_pad)))
+            arow = pl.load(acc_ref, (pl.ds(k, 1), pl.ds(0, n_pad)))
+            pl.store(ro_ref, (pl.ds(dslot, 1), pl.ds(0, n_pad)),
+                     rrow + arow.astype(rrow.dtype))
+
+
+def fused_tick(static, v, u, ring, gen_row, is_gen, a, b, c, d, t,
+               payload: KernelPayload, *, interpret: bool = False):
+    """Run one tick as a single Pallas program.
+
+    ``v``/``u`` [N] storage dtype, ``ring`` [L, N] (single-channel CUBA
+    ring, storage dtype), ``gen_row`` [N] bool (this tick's pre-drawn
+    generator spikes), ``is_gen`` [N] bool, ``a..d`` [N] IZH parameters,
+    ``t`` scalar int32 tick.  Returns ``(v', u', spikes, ring', i_syn)``
+    — exactly the engine's phase 1–5 outputs.
+    """
+    n = static.n
+    kp = payload
+    np_ = kp.n_pad
+    f32 = jnp.float32
+
+    def row(x, dtype=None):
+        x = x if dtype is None else x.astype(dtype)
+        return jnp.pad(x, (0, np_ - n))[None]
+
+    ring_p = jnp.pad(ring, ((0, 0), (0, np_ - n)))
+    delays = static.fused.delays
+    k_delays = max(1, len(delays))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # meta schedule + tick counter
+        grid=(kp.n_steps,),
+        in_specs=[
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # v
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # u
+            pl.BlockSpec(ring_p.shape, lambda i, m, tt: (0, 0)),  # ring
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # gen_row
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # is_gen
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # a
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # b
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # c
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # d
+            # streamed tiles: the index maps read the prefetched schedule,
+            # clamping to tile 0 on grid steps of the other kind (the
+            # pipeline still double-buffers the matching steps' DMAs).
+            pl.BlockSpec((1, kp.p_pad, kp.tile_q),
+                         lambda i, m, tt: (jnp.where(m[i, _KIND] == 0,
+                                                     m[i, _SEL], 0), 0,
+                                           jnp.where(m[i, _KIND] == 0,
+                                                     m[i, _QT], 0))),
+            pl.BlockSpec((kp.tile_r, kp.f_pad),
+                         lambda i, m, tt: (jnp.where(m[i, _KIND] == 1,
+                                                     m[i, _SEL], 0), 0)),
+            pl.BlockSpec((kp.tile_r, kp.f_pad),
+                         lambda i, m, tt: (jnp.where(m[i, _KIND] == 1,
+                                                     m[i, _SEL], 0), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # v'
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # u'
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # spikes
+            pl.BlockSpec((1, np_), lambda i, m, tt: (0, 0)),  # i_syn
+            pl.BlockSpec(ring_p.shape, lambda i, m, tt: (0, 0)),  # ring'
+            pl.BlockSpec((k_delays, np_), lambda i, m, tt: (0, 0)),  # acc
+        ],
+    )
+    kern = functools.partial(
+        _tick_kernel, ring_len=static.ring_len, dt=static.dt,
+        substeps=static.substeps, delays=delays, n_steps=kp.n_steps,
+        n_pad=np_, p_pad=kp.p_pad, tile_q=kp.tile_q, tile_r=kp.tile_r)
+    v_o, u_o, sp_o, isyn_o, ring_o, _acc = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, np_), v.dtype),
+            jax.ShapeDtypeStruct((1, np_), u.dtype),
+            jax.ShapeDtypeStruct((1, np_), jnp.bool_),
+            jax.ShapeDtypeStruct((1, np_), f32),
+            jax.ShapeDtypeStruct(ring_p.shape, ring.dtype),
+            jax.ShapeDtypeStruct((k_delays, np_), f32),
+        ],
+        interpret=interpret,
+    )(kp.meta, t.reshape(1).astype(jnp.int32),
+      row(v), row(u), ring_p, row(gen_row), row(is_gen),
+      row(a, f32), row(b, f32), row(c, f32), row(d, f32),
+      kp.w_stack, kp.csr_idx, kp.csr_w)
+    return (v_o[0, :n], u_o[0, :n], sp_o[0, :n], ring_o[:, :n],
+            isyn_o[0, :n])

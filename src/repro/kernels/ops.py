@@ -8,23 +8,47 @@ which lowers for the production mesh) and the kernel path.
 """
 from __future__ import annotations
 
+import functools
+import os
 from functools import partial
 
 import jax
 
 from repro.kernels import flash_attn as _flash
+from repro.kernels import fused_tick as _ftick
 from repro.kernels import izh_update as _izh
 from repro.kernels import stdp_update as _stdp
 from repro.kernels import syn_matmul as _syn
 
-__all__ = ["on_tpu", "izh4_update", "syn_matmul", "flash_attention", "stdp_update"]
+__all__ = ["on_tpu", "env_interpret", "izh4_update", "syn_matmul",
+           "flash_attention", "stdp_update", "fused_tick"]
+
+_FALSY = ("", "0", "false", "no", "off")
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def env_interpret() -> bool | None:
+    """Tri-state ``REPRO_PALLAS_INTERPRET`` override: ``None`` when the
+    variable is unset (auto-detect from the backend), else the parsed
+    bool — ``1`` forces interpret mode everywhere (CI exercising the
+    kernel code path deterministically), ``0`` forces it off."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is None:
+        return None
+    return env.strip().lower() not in _FALSY
+
+
+@functools.cache
 def _interpret() -> bool:
+    """Evaluated once per process (the backend never changes mid-run;
+    re-querying ``jax.default_backend()`` on every jit'd dispatch was
+    wasted work), overridable via ``REPRO_PALLAS_INTERPRET``."""
+    env = env_interpret()
+    if env is not None:
+        return env
     return not on_tpu()
 
 
@@ -37,6 +61,13 @@ def izh4_update(v, u, i_syn, a, b, c, d, *, dt: float = 1.0, substeps: int = 2):
 @jax.jit
 def syn_matmul(x, w):
     return _syn.syn_matmul(x, w, interpret=_interpret())
+
+
+def fused_tick(static, v, u, ring, gen_row, is_gen, a, b, c, d, t, payload):
+    """Single-program tick dispatch (called inside the engine's jitted
+    scan body — no extra jit wrapper needed)."""
+    return _ftick.fused_tick(static, v, u, ring, gen_row, is_gen, a, b, c,
+                             d, t, payload, interpret=_interpret())
 
 
 @partial(jax.jit, static_argnames=("causal", "window"))

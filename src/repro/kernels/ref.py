@@ -73,6 +73,53 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = -1,
     return o.reshape(b, hq, sq, dh).astype(q.dtype)
 
 
+def fused_tick_ref(v, u, ring, gen_row, is_gen, a, b, c, d, t, *,
+                   dense, csr, ring_len: int, dt: float = 1.0,
+                   substeps: int = 2):
+    """Whole-tick oracle for ``kernels.fused_tick`` — the engine's phase
+    1–5 semantics written the straightforward jnp way on UNPADDED
+    operands (an independent implementation: the kernel's lane padding,
+    tile schedule, and clamped DMAs must all cancel out against this).
+
+    ``ring`` [L, N] single-channel storage-dtype ring; ``dense`` iterates
+    ``(pre_start, post_start, delay_ms, W[P, Q])``; ``csr`` iterates
+    ``(post_start, delay_ms, idx[Q, F] global ids, w[Q, F])``.  Returns
+    ``(v', u', spikes, ring', i_syn)``.
+    """
+    f32 = jnp.float32
+    n = v.shape[0]
+    slot = jnp.mod(t, ring_len)
+    row = jax.lax.dynamic_index_in_dim(ring, slot, axis=0, keepdims=False)
+    i_syn = row.astype(f32)
+    ring = jax.lax.dynamic_update_index_in_dim(
+        ring, jnp.zeros_like(row), slot, axis=0)
+    v1, u1, spiked = izh4_ref(v, u, i_syn, a, b, c, d, dt=dt,
+                              substeps=substeps)
+    v2 = jnp.where(is_gen, c, v1.astype(f32)).astype(v.dtype)
+    u2 = jnp.where(is_gen, 0.0, u1.astype(f32)).astype(u.dtype)
+    spikes = jnp.where(is_gen, gen_row, spiked)
+    sf = spikes.astype(f32)
+    acc: dict[int, jax.Array] = {}
+    for ps, qs, dly, w in dense:
+        p, q = w.shape
+        drive = jnp.dot(sf[ps:ps + p], w.astype(f32),
+                        preferred_element_type=f32)
+        a_ = acc.get(dly, jnp.zeros((n,), f32))
+        acc[dly] = a_.at[qs:qs + q].add(drive)
+    for qs, dly, idx, w in csr:
+        drive = (jnp.take(sf, idx.astype(jnp.int32), axis=0)
+                 * w.astype(f32)).sum(axis=1)
+        a_ = acc.get(dly, jnp.zeros((n,), f32))
+        acc[dly] = a_.at[qs:qs + drive.shape[0]].add(drive)
+    for dly in sorted(acc):
+        dslot = jnp.mod(t + dly, ring_len)
+        r2 = jax.lax.dynamic_index_in_dim(ring, dslot, axis=0,
+                                          keepdims=False)
+        ring = jax.lax.dynamic_update_index_in_dim(
+            ring, r2 + acc[dly].astype(ring.dtype), dslot, axis=0)
+    return v2, u2, spikes, ring, i_syn
+
+
 def stdp_update_ref(w, mask, pre_trace, post_trace, pre_spikes, post_spikes,
                     *, a_plus: float, a_minus: float, w_min: float, w_max: float):
     """Fused pair-based STDP weight update (storage-dtype weights)."""

@@ -334,6 +334,82 @@ class TestSTDPGatherKernel:
         assert out.shape == (4, 0)
 
 
+class TestFusedTickKernel:
+    """Whole-tick megakernel vs the independent jnp oracle
+    (``ref.fused_tick_ref``) on a network OFF the lane grid (Synfire4-mini,
+    N=186 — not a multiple of the 128-lane block), fp32+fp16 storage,
+    dense and CSR tile schedules, random (non-engine-trajectory) state.
+
+    Bitwise, not allclose: the exactly-representable Synfire weight tables
+    plus +0.0 tile padding make every accumulation order exact, so the
+    kernel's lane padding / tile schedule / clamped DMAs must cancel out
+    perfectly against the oracle's unpadded arithmetic."""
+
+    def _net(self, policy, prop):
+        import dataclasses
+
+        from repro.configs.synfire4 import SYNFIRE4_MINI, build_synfire
+        net = build_synfire(SYNFIRE4_MINI, policy=policy, backend="fused",
+                            propagation=prop)
+        static = dataclasses.replace(net.static, fused_kernel=True)
+        return dataclasses.replace(net, static=static)
+
+    @pytest.mark.parametrize("prop", ["packed", "sparse"])
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    def test_matches_ref_bitwise(self, prop, policy):
+        from repro.core import backend as be
+        from repro.core import neurons as nrn
+        from repro.kernels import fused_tick as ftk
+
+        net = self._net(policy, prop)
+        static, params = net.static, net.params
+        assert static.n % 128 != 0  # off the lane grid on purpose
+        payload = be.assemble_fused(static, net.state0.weights, params)
+        kp = payload.kernel
+        assert kp is not None and kp.n_steps > 1  # a real tile schedule
+
+        rng = np.random.default_rng(7)
+        n = static.n
+        sdtype = net.state0.neurons.v.dtype
+        v = jnp.asarray(rng.uniform(-80, -20, n), sdtype)
+        u = jnp.asarray(rng.uniform(-15, 5, n), sdtype)
+        # exactly-representable ring charge (multiples of 0.25) so the
+        # bitwise contract holds for the i_syn read-back too
+        ring = jnp.asarray(rng.integers(0, 64, (static.ring_len, n)) * 0.25,
+                           net.state0.ring.dtype)
+        gen_row = jnp.asarray(rng.random(n) < 0.3)
+        p = params.neuron
+        is_gen = p.model == nrn.NeuronModel.GENERATOR
+        t = jnp.int32(137)  # deep into the run: ring slots wrap
+
+        out = ftk.fused_tick(static, v, u, ring, gen_row, is_gen,
+                             p.a, p.b, p.c, p.d, t, kp, interpret=True)
+
+        buckets = static.buckets
+        dense = [(b.pre_start, b.post_start, b.delay_ms, payload.packed[bi])
+                 for bi, b in enumerate(buckets) if b.kind == "dense"]
+        csr = [(b.post_start, b.delay_ms,
+                params.bucket_csr_idx[bi].astype(jnp.int32) + b.pre_start,
+                payload.packed[bi])
+               for bi, b in enumerate(buckets) if b.kind == "sparse"]
+        assert dense if prop == "packed" else csr
+        # jit the oracle: eager op-by-op dispatch skips XLA's mul+add FMA
+        # contraction and lands 1 ulp off the compiled kernel on fp32
+        # membranes — jitted-vs-kernel is the real contract (same policy
+        # as the stdp_gather golden).
+        import functools
+        want = jax.jit(functools.partial(
+            ref.fused_tick_ref, dense=dense, csr=csr,
+            ring_len=static.ring_len, dt=static.dt,
+            substeps=static.substeps))(
+                v, u, ring, gen_row, is_gen, p.a, p.b, p.c, p.d, t)
+        for name, o, w in zip(("v", "u", "spikes", "ring", "i_syn"),
+                              out, want):
+            np.testing.assert_array_equal(
+                np.asarray(o, np.float32), np.asarray(w, np.float32),
+                err_msg=f"fused tick kernel diverges from oracle on {name}")
+
+
 class TestFlashAttentionStress:
     @pytest.mark.parametrize("case", [
         # (b, hkv, g, sq, sk, d, window, kvdtype) — combined stress

@@ -141,16 +141,35 @@ class TestPlasticCostModel:
         assert c.state0.weights[0].shape == (600, 12)
         assert c.state0.weights[1].shape == (600, 20)
 
-    def test_stp_projection_excluded_from_csr(self):
+    def _stp_net(self, propagation):
         net = NetworkBuilder(seed=2)
         net.add_spike_generator("g", 50, rate_hz=100.0)
         net.add_group("n", izh4(20, a=0.02, b=0.2, c=-65.0, d=8.0))
         net.connect("g", "n", fanin=10, weight=0.5, delay_ms=1,
                     stdp=_stdp_cfg(), stp=STPConfig())
-        c = net.compile(policy="fp16", propagation="sparse")
-        assert c.static.plastic_csr == ()
+        return net.compile(policy="fp16", propagation=propagation)
+
+    def test_stp_projection_rides_csr_rows(self):
+        """STP projections are CSR-stored in every non-loop mode (the u·x
+        scale composes with the fan-in gather) — the dense matmul fallback
+        is gone from the hot loop."""
+        for prop in ("sparse", "packed", "auto"):
+            c = self._stp_net(prop)
+            spec = c.static.projections[0]
+            assert c.static.plastic_csr == ()  # stp_csr, not plastic_csr
+            assert c.static.stp_csr == (0,)
+            assert 0 in c.static.csr_projs
+            assert c.state0.weights[0].shape == (spec.post_size, spec.fanin)
+            # plastic ⇒ validity rows on device (the STDP mask)
+            assert c.params.masks[0].shape == (spec.post_size, spec.fanin)
+            assert c.params.proj_csr_idx[0].shape == (spec.post_size,
+                                                      spec.fanin)
+
+    def test_stp_projection_stays_dense_in_loop_mode(self):
+        c = self._stp_net("loop")
+        assert c.static.stp_csr == ()
         assert c.state0.weights[0].shape == (50, 20)
-        assert c.params.proj_csr_idx[0] is None  # matmul fallback
+        assert c.params.proj_csr_idx[0] is None
 
 
 class TestPlasticEngineParity:

@@ -21,6 +21,14 @@ Seed determinism is asserted per cell exactly like the engine sweep
 (``benchmarks/run.py --smoke`` gates it in CI): rebuilding the fleet with
 the same tenant seeds and re-running the same chunk schedule must
 reproduce every tenant's flushed spike counts bit-for-bit.
+
+:func:`bench_pool` adds the elastic-pool cells (``serve_pool_*``): rung
+throughput on a ``CapacityLadder`` up to **512 lanes** (aggregate
+simulated ticks/s), admit/evict latency into a warm 64-lane rung, the
+wall cost of a full 8→64 up-rung migration, per-rung lane bytes from the
+memory ledger, a bitwise migration-preservation assert under the same
+determinism flag, and (in smoke) a no-regression gate of ladder-managed
+throughput against the raw PR 5 single-scheduler fleet.
 """
 from __future__ import annotations
 
@@ -34,11 +42,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np  # noqa: E402
 
 from repro.configs.synfire4 import SYNFIRE4_MINI, build_synfire  # noqa: E402
-from repro.serve import LaneScheduler  # noqa: E402
+from repro.serve import CapacityLadder, LaneScheduler  # noqa: E402
 
 _REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
 TENANTS = (1, 8, 64)
+POOL_TENANTS = (8, 64, 512)  # capacity-ladder rungs exercised by bench_pool
 
 
 def _fleet(n_tenants: int) -> LaneScheduler:
@@ -128,6 +137,199 @@ def bench_serve(chunk_ticks: int = 200, n_chunks: int = 4, reps: int = 3,
     return results, derived
 
 
+def _pool_cell(n: int, **extra) -> dict:
+    """Row skeleton for a pool/ladder cell under the keyed-merge contract
+    (net, propagation, backend, batch, record)."""
+    return {
+        "net": f"serve_pool_{SYNFIRE4_MINI.name}",
+        "propagation": "packed",
+        "backend": "xla",
+        "batch": n,
+        **extra,
+    }
+
+
+def bench_pool(chunk_ticks: int = 200, n_chunks: int = 2, reps: int = 3,
+               write_json: bool = True, check_determinism: bool = True,
+               check_regression: bool = False,
+               max_tenants: int = 512) -> tuple[list[dict], dict]:
+    """Elastic-pool cells: rung throughput up to 512 lanes + the
+    admit/evict/migration latencies the elasticity story pays.
+
+    * ``serve_pool_* / record="monitors"`` at batch N — aggregate
+      simulated ticks/s with a full CapacityLadder rung of N tenants
+      (the ≥512-lane scaling cell).
+    * ``record="admit" / "evict"`` at batch 64 — µs to place a tenant
+      into / slice it out of a warm 64-lane rung (evict includes its
+      final telemetry flush).
+    * ``record="migrate"`` at batch 8 — wall for a full 8→64 up-rung
+      migration (export 8 lanes, build the rung, restore 8 lanes),
+      triggered by the admit that overflows rung 8. Compilation of the
+      new rung's step program is NOT in this number (it happens on the
+      rung's first step; revisited rungs reuse the jit cache).
+
+    ``check_determinism`` gates bitwise same-seed reproducibility of the
+    flushed counts AND that migration preserves every lane bit-for-bit.
+    ``check_regression`` (smoke) gates ladder-managed throughput against
+    a raw PR 5 single-scheduler fleet at the same N — the pool layer must
+    cost nothing but Python routing.
+    """
+    import jax
+
+    results: list[dict] = []
+    derived: dict = {}
+    rungs = tuple(n for n in POOL_TENANTS if n <= max_tenants)
+
+    # -- rung throughput ------------------------------------------------------
+    # Pod-scale serving budget: a 512-lane rung replicates ~10 MB of lane
+    # state — deliberately past the paper's 8.477 MB MCU budget (that
+    # constraint governs ONE tenant on-device; the ladder's per-rung
+    # ledger keys are how the fleet footprint is tracked at HBM scale).
+    from repro.memory import V5E_HBM_BYTES
+    net = build_synfire(SYNFIRE4_MINI, policy="fp16",
+                        budget=V5E_HBM_BYTES)
+    for n in rungs:
+        lad = CapacityLadder(net, rungs=(n,))
+        for i in range(n):
+            lad.admit(f"tenant{i}", seed=i)
+        lad.step(chunk_ticks)  # warmup: compiles the rung's program
+        wall = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(n_chunks):
+                lad.step(chunk_ticks)
+            jax.block_until_ready(lad.scheduler.states)
+            wall = min(wall, time.perf_counter() - t0)
+        per_rung = net.ledger.serve_rung_bytes()
+        results.append(_pool_cell(
+            n, record="monitors", ticks=chunk_ticks * n_chunks, reps=reps,
+            chunk_ticks=chunk_ticks, wall_s=round(wall, 4),
+            ms_per_chunk=round(wall / n_chunks * 1e3, 3),
+            session_ticks_per_sec=round(n * chunk_ticks * n_chunks / wall, 1),
+            rung_bytes=per_rung[f"rung{n}"],
+            session_bytes=lad.scheduler.session_bytes))
+        derived[f"pool_n{n}_ticks_per_sec"] = \
+            results[-1]["session_ticks_per_sec"]
+        derived[f"pool_rung{n}_bytes"] = per_rung[f"rung{n}"]
+        lad.scheduler.close()
+
+    # -- admit / evict latency on a warm 64-lane rung -------------------------
+    sched = LaneScheduler(net, 64)
+    for i in range(32):
+        sched.admit(f"warm{i}", seed=i)
+    sched.step(chunk_ticks)
+    sched.admit("warmup-probe")  # compile the lane read/write/flush
+    sched.evict("warmup-probe")  # programs out of the timed region
+    admit_w = evict_w = float("inf")
+    for r in range(reps):
+        t0 = time.perf_counter()
+        sched.admit("probe", seed=10_000 + r)
+        jax.block_until_ready(sched.states)
+        admit_w = min(admit_w, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        ev = sched.evict("probe")
+        jax.block_until_ready(ev.state)
+        evict_w = min(evict_w, time.perf_counter() - t0)
+    results.append(_pool_cell(64, record="admit",
+                              us_per_call=round(admit_w * 1e6, 1)))
+    results.append(_pool_cell(64, record="evict",
+                              us_per_call=round(evict_w * 1e6, 1)))
+    derived["pool_admit_us"] = results[-2]["us_per_call"]
+    derived["pool_evict_us"] = results[-1]["us_per_call"]
+    sched.close()
+
+    # -- migration latency: the admit that overflows rung 8 into rung 64 -----
+    mig_w = float("inf")
+    for rep in range(reps + 1):  # rep 0 is warmup (slicing-program compiles)
+        lad = CapacityLadder(net, rungs=(8, 64))
+        for i in range(8):
+            lad.admit(f"mig{i}", seed=i)
+        lad.step(chunk_ticks)
+        t0 = time.perf_counter()
+        lad.admit("overflow")  # export 8 -> build rung 64 -> restore 8
+        jax.block_until_ready(lad.scheduler.states)
+        if rep > 0:
+            mig_w = min(mig_w, time.perf_counter() - t0)
+        assert lad.rung == 64 and lad.migrations == 1
+        lad.scheduler.close()
+    results.append(_pool_cell(8, record="migrate", migrate_to=64,
+                              ms_per_call=round(mig_w * 1e3, 3)))
+    derived["pool_migrate_8_to_64_ms"] = results[-1]["ms_per_call"]
+
+    if check_determinism:
+        # (a) same-seed ladder rerun => bitwise-identical flushed counts
+        runs = []
+        for _ in range(2):
+            lad = CapacityLadder(net, rungs=(8,))
+            for i in range(8):
+                lad.admit(f"tenant{i}", seed=i)
+            lad.step(chunk_ticks)
+            runs.append(_counts(lad.scheduler))
+            lad.scheduler.close()
+        assert np.array_equal(runs[0], runs[1]), (
+            "pool cell N=8: same-seed ladder rerun produced different "
+            "flushed spike counts")
+        assert runs[0].sum() > 0, "pool cell N=8: no tenant fired"
+        # (b) migration preserves every lane bitwise (state + key data)
+        lad = CapacityLadder(net, rungs=(8, 64))
+        for i in range(8):
+            lad.admit(f"tenant{i}", seed=i)
+        lad.step(chunk_ticks)
+        before = {sid: lad.export(sid) for sid in list(lad.session_ids)}
+        for snap in before.values():
+            lad.restore(snap)  # round-trips through fresh lanes
+        lad.admit("overflow")  # 8 -> 64 up-rung
+        for sid, snap in before.items():
+            after = lad.export(sid)
+            for a, b in zip(jax.tree.leaves(jax.tree.map(
+                    lambda x: jax.random.key_data(x)
+                    if jax.numpy.issubdtype(x.dtype, jax.dtypes.prng_key)
+                    else x, snap.state)),
+                    jax.tree.leaves(jax.tree.map(
+                        lambda x: jax.random.key_data(x)
+                        if jax.numpy.issubdtype(x.dtype,
+                                                jax.dtypes.prng_key)
+                        else x, after.state))):
+                assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), (
+                    f"migration perturbed tenant {sid}")
+        lad.scheduler.close()
+        derived["pool_determinism"] = "ok"
+
+    if check_regression:
+        # Ladder-managed fleet vs raw PR 5 scheduler, same N + schedule:
+        # the elasticity layer must add only Python routing (generous
+        # band for single-core timer noise).
+        n = 8
+        raw = LaneScheduler(net, n)
+        lad = CapacityLadder(net, rungs=(n,))
+        for i in range(n):
+            raw.admit(f"r{i}", seed=i)
+            lad.admit(f"l{i}", seed=i)
+        raw.step(chunk_ticks)
+        lad.step(chunk_ticks)
+        raw_w = lad_w = float("inf")
+        for _ in range(max(reps, 3)):
+            t0 = time.perf_counter()
+            raw.step(chunk_ticks)
+            jax.block_until_ready(raw.states)
+            raw_w = min(raw_w, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            lad.step(chunk_ticks)
+            jax.block_until_ready(lad.scheduler.states)
+            lad_w = min(lad_w, time.perf_counter() - t0)
+        ratio = lad_w / raw_w
+        derived["pool_vs_raw_ratio"] = round(ratio, 3)
+        assert ratio < 1.5, (
+            f"pool-throughput regression: ladder chunk {lad_w * 1e3:.2f} ms "
+            f"vs raw scheduler {raw_w * 1e3:.2f} ms ({ratio:.2f}x > 1.5x)")
+        raw.close()
+        lad.scheduler.close()
+
+    if write_json:
+        _merge(os.path.join(_REPO_ROOT, "BENCH_engine.json"), results)
+    return results, derived
+
+
 def _merge(out_path: str, rows: list[dict]) -> None:
     """Merge serve cells into BENCH_engine.json under the engine sweep's
     keyed-cell contract (net, propagation, backend, batch, record)."""
@@ -140,8 +342,10 @@ def _merge(out_path: str, rows: list[dict]) -> None:
 
 def main() -> None:
     rows, derived = bench_serve()
+    pool_rows, pool_derived = bench_pool()
+    derived.update(pool_derived)
     print(json.dumps(derived, indent=1))
-    for r in rows:
+    for r in rows + pool_rows:
         print(" ", r)
 
 

@@ -32,7 +32,7 @@ def _run(name, fn):
 
 def main(argv: list[str] | None = None) -> None:
     from benchmarks.bench_engine import bench_engine
-    from benchmarks.bench_serve import bench_serve
+    from benchmarks.bench_serve import bench_pool, bench_serve
     from benchmarks.report import paper_report
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -64,10 +64,20 @@ def main(argv: list[str] | None = None) -> None:
             # bit-for-bit (the serve cells' merge-key contract)
             return bench_serve(chunk_ticks=40, n_chunks=2, reps=1,
                                write_json=False, check_determinism=True)
+
+        def pool_fn():
+            # elastic-pool smoke: rungs capped at 64 lanes, one rep, but
+            # ALWAYS both gates — bitwise seed determinism + migration
+            # preservation, and ladder throughput no worse than the raw
+            # PR 5 single-scheduler fleet at the same N
+            return bench_pool(chunk_ticks=40, n_chunks=1, reps=1,
+                              write_json=False, check_determinism=True,
+                              check_regression=True, max_tenants=64)
     else:
         engine_fn = bench_engine
         report_fn = paper_report
         serve_fn = bench_serve
+        pool_fn = bench_pool
 
     results = {}
     for name, fn in [
@@ -78,6 +88,7 @@ def main(argv: list[str] | None = None) -> None:
         ("table5_performance", paper_tables.table5_performance),
         ("bench_engine", engine_fn),  # writes/merges BENCH_engine.json
         ("bench_serve", serve_fn),  # serve_* cells, same JSON merge
+        ("bench_pool", pool_fn),  # elastic-pool cells (rungs, latencies)
         ("paper_report", report_fn),  # accuracy / real-time / energy metrics
     ]:
         results[name] = _run(name, fn)

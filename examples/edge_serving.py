@@ -1,4 +1,5 @@
-"""Edge serving: three tenants, chunked sessions, flushes, a checkpoint.
+"""Edge serving: tenants, chunked sessions, flushes, a checkpoint — and an
+elastic two-topology pool that up-rungs mid-stream.
 
 The serving shape the ROADMAP asks for, end to end on Synfire4-mini (the
 paper's real-time MCU configuration):
@@ -11,10 +12,15 @@ paper's real-time MCU configuration):
 3. Evict one tenant mid-stream, checkpoint it, restore it as a solo
    ``Session``, and keep serving — bit-exactly, as if never interrupted
    (the chunking/checkpoint guarantees ``tests/test_serve.py`` asserts).
+4. Scale out with a ``ServePool``: two *different* topologies share one
+   pool (one capacity ladder per compile fingerprint), and a burst of
+   admissions forces an up-rung migration 1 → 8 lanes mid-stream —
+   nobody's stimulus stream, weights, or flush accounting notices
+   (``tests/test_serve_pool.py`` asserts this bit-exactly).
 
   PYTHONPATH=src python examples/edge_serving.py
 
-The network here also carries STDP + chunk-boundary homeostasis on its
+The learning network carries STDP + chunk-boundary homeostasis on its
 feed-forward chain, so each tenant's weights *learn* from its own
 stimulus while CARLsim's slow-timer scaling keeps rates near target —
 the full feature set, served.
@@ -29,7 +35,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs.synfire4 import SYNFIRE4_MINI, CHAIN_STDP, build_synfire
 from repro.core import Engine
 from repro.core.plasticity import HomeostasisConfig
-from repro.serve import LaneScheduler, Session, restore_session, save_session
+from repro.serve import (
+    LaneScheduler,
+    ServePool,
+    Session,
+    restore_session,
+    save_session,
+)
 
 CHUNK = 100  # ticks per serving chunk (= 100 ms of model time)
 
@@ -76,6 +88,35 @@ def main() -> None:
     print(f"bob restored from checkpoint at tick {bob2.ticks - CHUNK}; "
           f"next chunk: {f['spike_count'].sum()} spikes "
           f"(scheduler marches on with {sched.occupancy} tenants)")
+
+    # ---- part 2: elastic two-topology pool ---------------------------------
+    # A second, different topology: plain fp32 sparse, no plasticity. The
+    # pool fingerprints each network and keeps one capacity ladder per
+    # topology — heterogeneous tenants no longer share a compiled program.
+    net_b = build_synfire(
+        dataclasses.replace(cfg, name="synfire4_mini_plain"),
+        policy="fp32", propagation="sparse")
+    pool = ServePool(rungs=(1, 8, 64))
+    pool.admit(net, "dave")      # learning topology, rung 1
+    pool.admit(net_b, "erin")    # plain topology, its own rung-1 ladder
+    pool.step(CHUNK)
+    print(f"pool: {len(pool.fingerprints)} topologies, "
+          f"rungs {[pool.ladder_of(s).rung for s in ('dave', 'erin')]}, "
+          f"per-rung bytes {net.ledger.serve_rung_bytes()}")
+
+    # Burst of traffic on the learning topology: the 4th admit overflows
+    # rung 1 -> the ladder exports dave (state + RNG stream + telemetry
+    # accumulators, raw), builds the 8-lane rung, restores him, and seats
+    # the newcomers. Mid-stream, and invisible to dave's numerics.
+    for i in range(3):
+        pool.admit(net, f"burst{i}")
+    pool.step(CHUNK)
+    lad = pool.ladder_of("dave")
+    f = pool.flush("dave")
+    print(f"burst: ladder up-runged to {lad.rung} lanes "
+          f"({lad.migrations} migration), dave's flush still spans "
+          f"{f['n_ticks']} ticks / {f['spike_count'].sum()} spikes — "
+          f"per-rung bytes now {net.ledger.serve_rung_bytes()}")
 
 
 if __name__ == "__main__":

@@ -38,7 +38,27 @@ except ImportError:  # jax 0.4.x keeps it in experimental (check_rep kwarg)
 from repro.core import neurons as nrn
 from repro.core.network import CompiledNetwork
 
-__all__ = ["ShardedSNN", "build_sharded", "sharded_from_network"]
+__all__ = ["ShardedSNN", "build_sharded", "sharded_from_network", "lane_mesh"]
+
+
+def lane_mesh(n: int | None = None, *, axis: str = "lanes") -> Mesh:
+    """A 1-D device mesh for serving-lane sharding (``LaneScheduler(mesh=...)``).
+
+    Uses ``n`` devices (default: all visible). The lane axis is the only
+    sharded dimension in the serving plane — lanes never interact, so this
+    mesh carries zero collectives. On a 1-device CPU host, spawn virtual
+    devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=K``
+    (set before jax import — see ``tests/test_distributed.py``).
+    """
+    devices = jax.devices()
+    if n is None:
+        n = len(devices)
+    if n > len(devices):
+        raise ValueError(
+            f"requested {n} mesh devices but only {len(devices)} visible — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "jax import to fake more on CPU")
+    return Mesh(np.array(devices[:n]), (axis,))
 
 
 class ShardedParams(NamedTuple):

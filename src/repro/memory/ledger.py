@@ -143,6 +143,22 @@ class MemoryLedger:
         nb = self.name_bytes()
         return sum(v for k, v in nb.items() if k.startswith("serve."))
 
+    def serve_rung_bytes(self) -> dict[str, int]:
+        """Serving bytes per capacity rung: ``serve.*`` registrations
+        grouped by their ledger key (the suffix after ``serve.lanes.`` /
+        ``serve.telemetry.`` — e.g. ``"rung64"``, or ``"<fp8>.rung512"``
+        for a pool ladder). Un-keyed registrations (a bare
+        ``LaneScheduler``) group under ``""``. Only the occupied rung of
+        each ladder is registered at any time, so this is the live
+        footprint a capacity migration just bought or shed."""
+        out: dict[str, int] = {}
+        for e in self._entries:
+            for prefix in ("serve.lanes", "serve.telemetry"):
+                if e.name == prefix or e.name.startswith(prefix + "."):
+                    key = e.name[len(prefix) + 1:]
+                    out[key] = out.get(key, 0) + e.nbytes
+        return out
+
     def synapse_bytes(self) -> int:
         """Connectivity + weight payload bytes (the paper's fp16 headline):
         dense masks/weights plus CSR index tables, whichever each

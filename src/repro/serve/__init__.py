@@ -8,28 +8,49 @@ layer on top of the simulation engine.
 * :class:`LaneScheduler` (``repro.serve.scheduler``) — N same-topology
   sessions multiplexed onto the lanes of one vmapped device program
   (admit / evict / step), idle lanes silenced, footprint in the memory
-  ledger.
+  ledger; the lane axis optionally sharded across a device mesh
+  (``mesh=`` + ``core.distributed.lane_mesh``); lanes migrate between
+  schedulers as raw :class:`LaneSnapshot` payloads (``export`` /
+  ``restore`` — no flush, no stream perturbation).
+* :class:`CapacityLadder` / :class:`ServePool` (``repro.serve.pool``) —
+  lane-count elasticity over pre-compiled rungs (N ∈ {1, 8, 64, 512})
+  and a cross-topology admission router keyed by compile fingerprint.
 * ``repro.serve.lifecycle`` — chunk-boundary homeostasis rationale +
-  bit-exact session checkpoint/restore (:func:`save_session`,
-  :func:`restore_session`).
+  bit-exact session and lane checkpoint/restore (:func:`save_session`,
+  :func:`restore_session`, :func:`save_lane`, :func:`restore_lane`).
 
 See ``examples/edge_serving.py`` and the README's "Serving sessions at
-the edge" section for the end-to-end shape.
+the edge" / "Serving at scale" sections for the end-to-end shape.
 """
 from repro.serve.lifecycle import (
     latest_session_step,
+    restore_lane,
     restore_session,
+    save_lane,
     save_session,
 )
-from repro.serve.scheduler import Evicted, LaneScheduler
+from repro.serve.pool import (
+    RUNGS,
+    CapacityLadder,
+    ServePool,
+    compile_fingerprint,
+)
+from repro.serve.scheduler import Evicted, LaneScheduler, LaneSnapshot
 from repro.serve.session import Session, SessionMonitors
 
 __all__ = [
+    "CapacityLadder",
     "Evicted",
     "LaneScheduler",
+    "LaneSnapshot",
+    "RUNGS",
+    "ServePool",
     "Session",
     "SessionMonitors",
+    "compile_fingerprint",
     "latest_session_step",
+    "restore_lane",
     "restore_session",
+    "save_lane",
     "save_session",
 ]

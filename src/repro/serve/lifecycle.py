@@ -38,10 +38,12 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.core.engine import Engine
 from repro.core.network import CompiledNetwork
+from repro.serve.scheduler import LaneSnapshot
 from repro.serve.session import Session
 from repro.telemetry import monitors as tel
 
-__all__ = ["save_session", "restore_session", "latest_session_step"]
+__all__ = ["save_session", "restore_session", "latest_session_step",
+           "save_lane", "restore_lane"]
 
 
 def _is_key(leaf) -> bool:
@@ -127,6 +129,56 @@ def restore_session(ckpt_dir: str, net: CompiledNetwork | Engine, *,
         session.monitors.carry = tuple(payload["tel"])
         session.monitors.ticks_since_flush = int(payload["tel_ticks"])
     return session
+
+
+def save_lane(ckpt_dir: str, snap: LaneSnapshot, *,
+              step: int | None = None) -> str:
+    """Persist an exported scheduler lane (:class:`LaneSnapshot`) — the
+    cross-process half of a migration: ``sched.export(sid)`` here,
+    :func:`restore_lane` → ``other.restore(snap)`` elsewhere, bit-exact
+    down to the flush accounting. Same atomic npz writer as
+    :func:`save_session`; ``step`` defaults to the lane's tick cursor."""
+    payload = {
+        "session_id": np.frombuffer(snap.session_id.encode(), np.uint8),
+        "state": _pack_keys(snap.state),
+        "gen_key": jax.random.key_data(snap.gen_key),
+        "ticks": np.int32(snap.ticks),
+        "tel": snap.tel if snap.tel is not None else (),
+        "tel_ticks": np.int32(snap.ticks_since_flush),
+    }
+    return ckpt.save(ckpt_dir, step if step is not None else snap.ticks,
+                     payload)
+
+
+def restore_lane(ckpt_dir: str, net: CompiledNetwork | Engine, *,
+                 step: int | None = None) -> LaneSnapshot:
+    """Rebuild a :class:`LaneSnapshot` from disk, ready for
+    ``LaneScheduler.restore`` / ``CapacityLadder.restore`` /
+    ``ServePool.restore`` over the same compiled network."""
+    engine = net if isinstance(net, Engine) else Engine(net)
+    static = engine.net.static
+    if step is None:
+        step = ckpt.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no lane checkpoints in {ckpt_dir}")
+    has_tel = _file_has_tel(ckpt_dir, step)
+    like = {
+        "session_id": np.zeros((0,), np.uint8),
+        "state": _pack_keys(engine.net.state0),
+        "gen_key": jax.random.key_data(jax.random.key(0)),
+        "ticks": np.int32(0),
+        "tel": _tel_template(static) if has_tel else (),
+        "tel_ticks": np.int32(0),
+    }
+    payload = ckpt.restore(ckpt_dir, step, like)
+    return LaneSnapshot(
+        session_id=bytes(np.asarray(payload["session_id"])).decode(),
+        state=_unpack_keys(payload["state"], engine.net.state0),
+        gen_key=_wrap(payload["gen_key"]),
+        tel=tuple(payload["tel"]) if has_tel else None,
+        ticks=int(payload["ticks"]),
+        ticks_since_flush=int(payload["tel_ticks"]),
+    )
 
 
 def latest_session_step(ckpt_dir: str) -> int | None:

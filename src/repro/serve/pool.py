@@ -1,0 +1,297 @@
+"""Elastic serving pool: capacity ladder per topology, router across them.
+
+Two layers on top of :class:`~repro.serve.LaneScheduler`:
+
+:class:`CapacityLadder` — lane-count elasticity for ONE compiled topology.
+jit shapes are static, so a scheduler's lane count is baked into its
+compiled program; the ladder keeps a rung sequence of lane counts
+(default N ∈ {1, 8, 64, 512}) and moves the whole tenant fleet between
+rungs through :class:`~repro.serve.LaneSnapshot` migration — admit beyond
+the current rung's capacity up-rungs *before* placing the new tenant;
+sustained occupancy below a smaller rung (``idle_after`` consecutive
+steps) down-rungs to shed lane bytes. Migration is bit-exact by
+construction: ``export`` slices each lane out raw (state, plastic
+weights, RNG stream key, cumulative telemetry carry, flush counters — no
+flush, no host round-trip semantics) and ``restore`` writes it into the
+new rung, so no tenant's raster/weights/generator stream/flush accounting
+can observe the move (asserted across the full propagation×backend×dtype
+matrix in ``tests/test_serve_pool.py``). Each rung visited leaves its
+compiled program in jax's jit cache — re-visiting a rung recompiles
+nothing; only a *first* visit pays a compile. Rung lane bytes are
+ledger-registered under per-rung names
+(``serve.lanes.rung64`` — ``MemoryLedger.serve_rung_bytes``), with only
+the occupied rung registered at any time.
+
+:class:`ServePool` — cross-topology admission router. Tenants no longer
+need to share one compiled network: the pool keys one ladder per
+*compile fingerprint* (:func:`compile_fingerprint` — a content hash of
+the static plan, parameter images, and initial weights: exactly the
+inputs that determine the compiled program and its numerics) and routes
+``admit``/``step``/``flush``/``evict`` by session id. Two nets built from
+the same config land on the same ladder (same fingerprint → same lanes);
+any difference that would change compilation or numerics (topology,
+propagation mode, backend, precision policy, weights) forks a new ladder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.network import CompiledNetwork, NetState
+from repro.serve.scheduler import Evicted, LaneScheduler, LaneSnapshot
+
+__all__ = ["CapacityLadder", "ServePool", "compile_fingerprint", "RUNGS"]
+
+RUNGS = (1, 8, 64, 512)
+
+
+def compile_fingerprint(net: CompiledNetwork) -> str:
+    """Content hash identifying a compiled topology for pool routing.
+
+    Covers everything that selects the compiled program and its numerics:
+    the static plan (``repr(NetStatic)`` — topology, buckets, propagation,
+    backend, monitors, policy knobs), every ``NetParams`` leaf (dtype,
+    shape, raw bytes: weight images, CSR tables, generator schedules), and
+    the initial weights. Two networks with equal fingerprints can share a
+    scheduler's lanes bit-exactly. Cached on the instance — params are
+    immutable after compile.
+    """
+    cached = getattr(net, "_fingerprint", None)
+    if cached is not None:
+        return cached
+    h = hashlib.sha1(repr(net.static).encode())
+    for leaf in jax.tree.leaves((net.params, net.state0.weights)):
+        arr = np.asarray(leaf)
+        h.update(str((arr.dtype, arr.shape)).encode())
+        h.update(arr.tobytes())
+    fp = h.hexdigest()
+    net._fingerprint = fp
+    return fp
+
+
+class CapacityLadder:
+    """Elastic lane capacity for one topology via rung-to-rung migration.
+
+    The ladder lazily builds a :class:`LaneScheduler` at the smallest rung
+    that fits the fleet, and migrates the whole fleet (``export_all`` →
+    ``restore``) whenever occupancy crosses rung boundaries: up on the
+    admit that would overflow, down after ``idle_after`` consecutive
+    :meth:`step` calls during which a smaller rung would have sufficed
+    (hysteresis — one transient eviction doesn't thrash the ladder).
+
+    With a ``mesh``, rungs divisible by the mesh axis size run sharded;
+    smaller rungs run single-device (a 1-lane program has nothing to
+    shard). Per-rung ledger names carry ``ledger_prefix`` so a pool of
+    ladders reports bytes per topology per rung.
+    """
+
+    def __init__(self, net: CompiledNetwork, *, rungs=RUNGS,
+                 record: str = "monitors", mesh: Mesh | None = None,
+                 mesh_axis: str = "lanes", idle_after: int = 2,
+                 ledger_prefix: str = ""):
+        if not rungs:
+            raise ValueError("need at least one rung")
+        self.net = net
+        self.rungs = tuple(sorted(set(int(r) for r in rungs)))
+        self.record = record
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
+        self.idle_after = idle_after
+        self.ledger_prefix = ledger_prefix
+        self.migrations = 0
+        self._sched: LaneScheduler | None = None
+        self._idle_steps = 0
+
+    # -- rung plumbing --------------------------------------------------------
+    @property
+    def rung(self) -> int | None:
+        """Current rung's lane count (None before the first admit)."""
+        return self._sched.capacity if self._sched else None
+
+    @property
+    def scheduler(self) -> LaneScheduler | None:
+        return self._sched
+
+    def rung_for(self, n_tenants: int) -> int:
+        """Smallest rung with at least ``n_tenants`` lanes."""
+        for r in self.rungs:
+            if r >= n_tenants:
+                return r
+        raise RuntimeError(
+            f"{n_tenants} tenants exceed the top rung "
+            f"({self.rungs[-1]} lanes) — extend rungs=")
+
+    def _build(self, n: int) -> LaneScheduler:
+        mesh = self.mesh
+        if mesh is not None and n % mesh.shape[self.mesh_axis]:
+            mesh = None  # rung smaller than the mesh: run unsharded
+        return LaneScheduler(
+            self.net, n, record=self.record, mesh=mesh,
+            mesh_axis=self.mesh_axis,
+            ledger_key=f"{self.ledger_prefix}rung{n}")
+
+    def _migrate(self, new_rung: int) -> None:
+        """Move the whole fleet to ``new_rung`` through raw lane snapshots
+        — no flush, no RNG perturbation, no telemetry drain; the old
+        rung's ledger registration is released. Revisiting a rung size
+        reuses its jit-cached program (same static config + shapes)."""
+        snaps: list[LaneSnapshot] = []
+        if self._sched is not None:
+            snaps = self._sched.export_all()
+            self._sched.close()
+        self._sched = self._build(new_rung)
+        for snap in snaps:
+            self._sched.restore(snap)
+        self.migrations += 1
+        self._idle_steps = 0
+
+    # -- tenant API -----------------------------------------------------------
+    def admit(self, session_id: str, *, seed: int | None = None,
+              key: jax.Array | None = None,
+              state: NetState | None = None) -> int:
+        self._ensure_capacity(self.occupancy + 1)
+        return self._sched.admit(session_id, seed=seed, key=key, state=state)
+
+    def _ensure_capacity(self, n_tenants: int) -> None:
+        """First build or up-rung migration so ``n_tenants`` fit."""
+        if self._sched is None:
+            self._sched = self._build(self.rung_for(n_tenants))
+        elif n_tenants > self._sched.capacity:
+            self._migrate(self.rung_for(n_tenants))
+        self._idle_steps = 0
+
+    def restore(self, snap: LaneSnapshot) -> int:
+        """Admit an exported/checkpointed lane snapshot, up-runging first
+        if full — telemetry accumulators and flush counters carry over."""
+        self._ensure_capacity(self.occupancy + 1)
+        return self._sched.restore(snap)
+
+    def evict(self, session_id: str) -> Evicted:
+        return self._sched.evict(session_id)
+
+    def export(self, session_id: str) -> LaneSnapshot:
+        return self._sched.export(session_id)
+
+    def flush(self, session_id: str) -> dict:
+        return self._sched.flush(session_id)
+
+    def step(self, n_ticks: int) -> None:
+        """Advance every lane one chunk, then apply the down-rung rule:
+        after ``idle_after`` consecutive steps during which the fleet fit
+        a smaller rung, migrate down and shed the spare lane bytes."""
+        if self._sched is None:
+            return
+        self._sched.step(n_ticks)
+        target = self.rung_for(max(1, self._sched.occupancy))
+        if target < self._sched.capacity:
+            self._idle_steps += 1
+            if self._idle_steps >= self.idle_after:
+                self._migrate(target)
+        else:
+            self._idle_steps = 0
+
+    @property
+    def occupancy(self) -> int:
+        return self._sched.occupancy if self._sched else 0
+
+    @property
+    def session_ids(self) -> list[str]:
+        return self._sched.session_ids if self._sched else []
+
+
+class ServePool:
+    """Cross-topology admission router: one :class:`CapacityLadder` per
+    compile fingerprint, sessions routed by id.
+
+    ``admit`` takes the tenant's *network* — the pool fingerprints it and
+    lands the session on the matching ladder (building one on first
+    sight). ``step`` advances every ladder; per-session calls
+    (``flush``/``evict``/``export``) route through the session table.
+    Heterogeneous tenants therefore mix freely: each distinct topology/
+    precision/backend combination costs one compiled program per visited
+    rung, shared by all its tenants.
+    """
+
+    def __init__(self, *, rungs=RUNGS, record: str = "monitors",
+                 mesh: Mesh | None = None, mesh_axis: str = "lanes",
+                 idle_after: int = 2):
+        self._opts = dict(rungs=rungs, record=record, mesh=mesh,
+                          mesh_axis=mesh_axis, idle_after=idle_after)
+        self._ladders: dict[str, CapacityLadder] = {}
+        self._nets: dict[str, CompiledNetwork] = {}
+        self._routes: dict[str, str] = {}  # session id -> fingerprint
+
+    # -- topology table -------------------------------------------------------
+    @property
+    def fingerprints(self) -> list[str]:
+        return list(self._ladders)
+
+    def ladder_of(self, session_id: str) -> CapacityLadder:
+        return self._ladders[self._routes[session_id]]
+
+    def network_of(self, session_id: str) -> CompiledNetwork:
+        return self._nets[self._routes[session_id]]
+
+    @property
+    def session_ids(self) -> list[str]:
+        return list(self._routes)
+
+    @property
+    def occupancy(self) -> int:
+        return len(self._routes)
+
+    # -- tenant API -----------------------------------------------------------
+    def admit(self, net: CompiledNetwork, session_id: str, *,
+              seed: int | None = None, key: jax.Array | None = None,
+              state: NetState | None = None) -> str:
+        """Route a session onto its topology's ladder; returns the compile
+        fingerprint (the ladder key) for observability."""
+        if session_id in self._routes:
+            raise ValueError(f"session id {session_id!r} already admitted")
+        fp, ladder = self._ladder_for(net)
+        ladder.admit(session_id, seed=seed, key=key, state=state)
+        self._routes[session_id] = fp
+        return fp
+
+    def _ladder_for(self, net: CompiledNetwork) -> tuple[str, CapacityLadder]:
+        fp = compile_fingerprint(net)
+        ladder = self._ladders.get(fp)
+        if ladder is None:
+            ladder = CapacityLadder(net, ledger_prefix=f"{fp[:8]}.",
+                                    **self._opts)
+            self._ladders[fp] = ladder
+            self._nets[fp] = net
+        return fp, ladder
+
+    def evict(self, session_id: str) -> Evicted:
+        ev = self.ladder_of(session_id).evict(session_id)
+        del self._routes[session_id]
+        return ev
+
+    def export(self, session_id: str) -> LaneSnapshot:
+        snap = self.ladder_of(session_id).export(session_id)
+        del self._routes[session_id]
+        return snap
+
+    def restore(self, net: CompiledNetwork, snap: LaneSnapshot) -> str:
+        """Re-admit an exported lane snapshot under its original session id
+        (cross-pool/process migration: pair with ``serve.lifecycle``)."""
+        if snap.session_id in self._routes:
+            raise ValueError(
+                f"session id {snap.session_id!r} already admitted")
+        fp, ladder = self._ladder_for(net)
+        ladder.restore(snap)
+        self._routes[snap.session_id] = fp
+        return fp
+
+    def flush(self, session_id: str) -> dict:
+        return self.ladder_of(session_id).flush(session_id)
+
+    def step(self, n_ticks: int) -> None:
+        """One chunk for every ladder (each a single device program)."""
+        for ladder in self._ladders.values():
+            ladder.step(n_ticks)

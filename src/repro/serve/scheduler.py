@@ -25,10 +25,34 @@ in the horizon: ``step`` runs ``record="monitors"`` (or ``"none"``) — no
 [T, N] raster is ever materialized; telemetry crosses to the host only on
 :meth:`flush`.
 
+**Mesh sharding** (``mesh=``): the lane axis can be placed across a
+device mesh — :func:`jax.shard_map` partitions the batched pytrees on
+their leading (lane) dimension, so each device runs the vmapped tick scan
+over its own ``capacity / n_devices`` lanes. Lanes are embarrassingly
+parallel (no cross-lane term anywhere in the tick), so the sharded step
+needs **zero collectives** and is bit-identical per lane to the
+single-device scheduler — asserted by the 4-virtual-device subprocess
+parity test in ``tests/test_serve_pool.py`` (the
+``--xla_force_host_platform_device_count`` pattern from
+``tests/test_distributed.py``). The shared ``NetParams`` (weights images,
+CSR tables, generator schedules) stay replicated; only per-lane state,
+keys, flags, and telemetry shard.
+
+**Migration** (:meth:`export` / :meth:`restore`): the no-flush twin of
+evict/admit. ``export`` slices a lane out *with* its raw cumulative
+telemetry carry and flush counters — nothing is drained to the host, so
+the tenant's observable flush accounting is untouched; ``restore`` writes
+the snapshot into a free lane of any same-topology scheduler (a different
+capacity rung, a mesh-sharded scheduler, another process via
+``serve.lifecycle.save_lane``). This is what
+:class:`repro.serve.CapacityLadder` rides to move whole fleets between
+pre-compiled lane-count rungs bit-exactly.
+
 Lane occupancy and per-session bytes are registered in the network's
 :class:`~repro.memory.MemoryLedger` under a dedicated "8. Serve Lanes"
 stage, extending the paper's seven-step ramp-up table to the serving
-deployment (``MemoryLedger.serve_bytes``).
+deployment (``MemoryLedger.serve_bytes``; per-rung breakdown via
+``ledger_key`` and ``MemoryLedger.serve_rung_bytes``).
 """
 from __future__ import annotations
 
@@ -39,13 +63,15 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.distributed import _SHARD_MAP_NOCHECK, shard_map
 from repro.core.engine import _run_impl
 from repro.core.network import CompiledNetwork, NetState
 from repro.precision.policy import tree_bytes
 from repro.telemetry import monitors as tel
 
-__all__ = ["LaneScheduler"]
+__all__ = ["LaneScheduler", "LaneSnapshot", "Evicted"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +90,27 @@ class Evicted(NamedTuple):
     state: NetState
     gen_key: jax.Array  # the tenant's stimulus-stream key
     flush: dict | None  # final telemetry drain (None for record="none")
+
+
+class LaneSnapshot(NamedTuple):
+    """A lane sliced out *without* flushing — the migration payload.
+
+    Unlike :class:`Evicted`, the cumulative telemetry carry rides along
+    raw (``tel``; non-cumulative slots are stripped to ``()`` exactly as
+    ``SessionMonitors.absorb`` does, keeping the structure chunk-size
+    independent) together with the ticks-since-flush counter, so a
+    :meth:`LaneScheduler.restore` on any same-topology scheduler —
+    another capacity rung, a sharded mesh, another process — continues
+    the tenant as if never moved: same state, same stimulus stream, and
+    the *next flush reports exactly what the unmoved tenant's would*.
+    """
+
+    session_id: str
+    state: NetState
+    gen_key: jax.Array
+    tel: tuple | None  # cumulative carry slots; () where per-chunk
+    ticks: int
+    ticks_since_flush: int
 
 
 def _stack(tree, n: int):
@@ -88,10 +135,16 @@ class LaneScheduler:
     device program serve them all). ``record`` selects the per-chunk mode:
     ``"monitors"`` (default; requires compiled monitors) accumulates
     flushable telemetry per lane, ``"none"`` runs bare.
+
+    ``mesh``/``mesh_axis`` shard the lane axis across a device mesh (the
+    axis must divide ``capacity``); ``ledger_key`` namespaces the memory
+    ledger registrations (``serve.lanes.<key>``) so a ladder of
+    schedulers reports per-rung bytes.
     """
 
     def __init__(self, net: CompiledNetwork, capacity: int, *,
-                 record: str = "monitors"):
+                 record: str = "monitors", mesh: Mesh | None = None,
+                 mesh_axis: str = "lanes", ledger_key: str | None = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if record not in ("monitors", "none"):
@@ -101,9 +154,21 @@ class LaneScheduler:
         if record == "monitors" and not net.static.monitors:
             raise ValueError(
                 "record='monitors' needs a network compiled with monitors")
+        if mesh is not None:
+            if mesh_axis not in mesh.shape:
+                raise ValueError(
+                    f"mesh has no axis {mesh_axis!r} (axes: "
+                    f"{tuple(mesh.shape)})")
+            if capacity % mesh.shape[mesh_axis]:
+                raise ValueError(
+                    f"capacity ({capacity}) must be a multiple of the mesh "
+                    f"axis size ({mesh.shape[mesh_axis]}) — lanes shard "
+                    "evenly, no ragged device gets a partial lane block")
         self.net = net
         self.capacity = capacity
         self.record = record
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
         # Per-lane event gating (lax.cond) lowers to both-branches+select
         # under vmap, exactly as in Engine.run_batch — the batched program
         # relies on silent lanes contributing zero *events*, not on
@@ -118,18 +183,32 @@ class LaneScheduler:
         self._ticks_since_flush = [0] * capacity
         # Ledger: the serving deployment's footprint — per-lane replicated
         # state (the dominant term: N× the single-tenant mutable state)
-        # plus the per-lane telemetry accumulators.
-        net.ledger.release("serve.lanes")
-        net.ledger.release("serve.telemetry")
+        # plus the per-lane telemetry accumulators. ledger_key namespaces
+        # the names so a capacity ladder reports bytes per rung.
+        suffix = f".{ledger_key}" if ledger_key else ""
+        self._ledger_names = (f"serve.lanes{suffix}",
+                              f"serve.telemetry{suffix}")
+        for name in self._ledger_names:
+            net.ledger.release(name)
         with net.ledger.stage("8. Serve Lanes"):
-            net.ledger.register("serve.lanes", self.states)
+            net.ledger.register(self._ledger_names[0], self.states)
             if self._tel:
-                net.ledger.register("serve.telemetry", self._tel)
+                net.ledger.register(self._ledger_names[1], self._tel)
+
+    def close(self) -> None:
+        """Drop this scheduler's ledger registrations (a ladder migrating
+        off a rung frees its lane bytes; the arrays die with the object)."""
+        for name in self._ledger_names:
+            self.net.ledger.release(name)
 
     # -- occupancy ------------------------------------------------------------
     @property
     def occupancy(self) -> int:
         return sum(1 for s in self._lanes if s is not None)
+
+    @property
+    def session_ids(self) -> list[str]:
+        return [s.session_id for s in self._lanes if s is not None]
 
     @property
     def free_lanes(self) -> list[int]:
@@ -172,17 +251,31 @@ class LaneScheduler:
             key = jax.random.key(seed if seed is not None else
                                  zlib.crc32(session_id.encode()))
         state = state if state is not None else self.net.state0
+        # Recycled-slot hygiene: the incoming ``state`` replaces EVERY
+        # per-lane NetState leaf (membrane state, ring phase, plastic
+        # weights, homeostasis averages), and the telemetry carry is
+        # zeroed wholesale below. Both matter: evict() flushes but keeps
+        # the GroupRate filter *level* in the lane, and export() drains
+        # nothing at all — without this zeroing a recycled lane would
+        # hand its predecessor's rate level (or whole spike counts) to
+        # the next tenant (regression-tested in tests/test_serve_pool.py).
         self.states = _write_lane(self.states, lane, state)
         self.gen_keys = _write_lane(self.gen_keys, lane, key)
         self.active = self.active.at[lane].set(True)
-        if self._tel:
-            self._tel = _write_lane(
-                self._tel, lane,
-                jax.tree.map(jnp.zeros_like, _read_lane(self._tel, lane)))
+        self._zero_lane_tel(lane)
         self._lanes[lane] = _LaneInfo(session_id=session_id,
                                       ticks=int(state.t))
         self._ticks_since_flush[lane] = 0
         return lane
+
+    def _zero_lane_tel(self, lane: int) -> None:
+        """Fully re-zero one lane's telemetry carry — counts AND filter
+        levels (``flush`` deliberately keeps the latter, so an admit into
+        a previously-used slot must not rely on it)."""
+        if self._tel:
+            self._tel = _write_lane(
+                self._tel, lane,
+                jax.tree.map(jnp.zeros_like, _read_lane(self._tel, lane)))
 
     def evict(self, session_id: str) -> Evicted:
         """Remove a session; returns its live ``NetState``, its stimulus
@@ -190,7 +283,9 @@ class LaneScheduler:
 
         State + key together resume bit-exactly anywhere — solo session,
         re-admit, checkpoint; the lane goes idle (generator-gated silent)
-        until the next admit.
+        until the next admit. The final flush *drains* the tenant's
+        telemetry — for a move that must preserve flush accounting (rung
+        migration), use :meth:`export` instead.
         """
         lane = self.lane_of(session_id)
         state = _read_lane(self.states, lane)
@@ -200,17 +295,79 @@ class LaneScheduler:
         self._lanes[lane] = None
         return Evicted(state=state, gen_key=gen_key, flush=final)
 
+    # -- migration ------------------------------------------------------------
+    def export(self, session_id: str) -> LaneSnapshot:
+        """Slice a session out WITHOUT flushing — the migration payload.
+
+        The raw cumulative telemetry carry and the ticks-since-flush
+        counter ride along, so :meth:`restore` on another scheduler (a
+        different capacity rung, a mesh-sharded twin, another process via
+        ``serve.lifecycle.save_lane``) continues the tenant bit-exactly
+        INCLUDING its flush accounting: the next flush reports the same
+        counts/levels the unmoved tenant's would. The vacated lane keeps
+        stale carry values until the next admit, which zeroes them.
+        """
+        lane = self.lane_of(session_id)
+        tel_lane = None
+        if self._tel:
+            raw = _read_lane(self._tel, lane)
+            tel_lane = tuple(
+                c if isinstance(s, tel.CUMULATIVE) else ()
+                for s, c in zip(self.net.static.monitors, raw)
+            )
+        snap = LaneSnapshot(
+            session_id=session_id,
+            state=_read_lane(self.states, lane),
+            gen_key=self.gen_keys[lane],
+            tel=tel_lane,
+            ticks=self._lanes[lane].ticks,
+            ticks_since_flush=self._ticks_since_flush[lane],
+        )
+        self.active = self.active.at[lane].set(False)
+        self._lanes[lane] = None
+        return snap
+
+    def restore(self, snap: LaneSnapshot) -> int:
+        """Admit an exported lane, carrying its telemetry accumulators and
+        flush counters through — the receiving half of a migration."""
+        lane = self.admit(snap.session_id, key=snap.gen_key,
+                          state=snap.state)
+        if self._tel and snap.tel is not None:
+            cur = _read_lane(self._tel, lane)
+            merged = tuple(
+                s_snap if isinstance(spec, tel.CUMULATIVE) else s_cur
+                for spec, s_snap, s_cur in zip(self.net.static.monitors,
+                                               snap.tel, cur)
+            )
+            self._tel = _write_lane(self._tel, lane, merged)
+        self._ticks_since_flush[lane] = snap.ticks_since_flush
+        return lane
+
+    def export_all(self) -> list[LaneSnapshot]:
+        """Export every occupied lane (the whole-fleet migration payload),
+        in lane order — deterministic, so a ladder migration is seed-stable."""
+        return [self.export(s.session_id)
+                for s in list(self._lanes) if s is not None]
+
     # -- advance --------------------------------------------------------------
     def step(self, n_ticks: int) -> None:
         """Advance EVERY lane ``n_ticks`` in one vmapped device program.
 
         O(1) host memory: nothing is fetched; per-lane state and telemetry
         stay resident. Idle lanes ride along silenced (see module doc).
+        With a mesh, the lane axis is shard_map-partitioned across devices
+        — zero collectives, bit-identical per lane to the unsharded step.
         """
         tel_in = (self._chunk_tel(n_ticks),) if self._tel else ()
-        out = _step_lanes(self.static, self.net.params, self.states,
-                          self.gen_keys, self.active, n_ticks, self.record,
-                          *tel_in)
+        if self.mesh is None:
+            out = _step_lanes(self.static, self.net.params, self.states,
+                              self.gen_keys, self.active, n_ticks,
+                              self.record, *tel_in)
+        else:
+            out = _step_lanes_sharded(self.static, self.net.params,
+                                      self.states, self.gen_keys,
+                                      self.active, n_ticks, self.record,
+                                      self.mesh, self.mesh_axis, *tel_in)
         if self._tel:
             self.states, self._tel = out
         else:
@@ -252,13 +409,15 @@ class LaneScheduler:
                 for s in self._lanes if s is not None}
 
 
-@partial(jax.jit, static_argnames=("static", "n_ticks", "record"))
-def _step_lanes(static, params, states, gen_keys, active, n_ticks, record,
-                tel_carry=None):
-    """One chunk for every lane: vmap of the engine's ``_run_impl`` over
-    (state, gen stream, active flag, telemetry carry). Only carries come
-    back — per-chunk outputs (telemetry dicts the caller didn't ask for)
-    are dead code the jit eliminates."""
+def _lanes_vmap(static, params, states, gen_keys, active, n_ticks, record,
+                tel_carry):
+    """One chunk for every lane in the given batched pytrees: vmap of the
+    engine's ``_run_impl`` over (state, gen stream, active flag, telemetry
+    carry). Shared by the single-device jit and the shard_map per-device
+    body — per-lane arithmetic is identical either way, which is the whole
+    sharded-parity story. Only carries come back — per-chunk outputs
+    (telemetry dicts the caller didn't ask for) are dead code the jit
+    eliminates."""
 
     def one(state, key, act, tc):
         final, out = _run_impl(
@@ -274,3 +433,43 @@ def _step_lanes(static, params, states, gen_keys, active, n_ticks, record,
         return jax.vmap(one)(states, gen_keys, active, tel_carry)
     return jax.vmap(lambda s, k, a: one(s, k, a, None))(
         states, gen_keys, active)
+
+
+@partial(jax.jit, static_argnames=("static", "n_ticks", "record"))
+def _step_lanes(static, params, states, gen_keys, active, n_ticks, record,
+                tel_carry=None):
+    return _lanes_vmap(static, params, states, gen_keys, active, n_ticks,
+                       record, tel_carry)
+
+
+@partial(jax.jit, static_argnames=("static", "n_ticks", "record", "mesh",
+                                   "mesh_axis"))
+def _step_lanes_sharded(static, params, states, gen_keys, active, n_ticks,
+                        record, mesh, mesh_axis, tel_carry=None):
+    """The mesh-sharded step: shard_map partitions every per-lane pytree on
+    its leading (lane) axis; ``params`` stays replicated. Each device runs
+    the same vmapped body over its lane block — no collective appears
+    anywhere (lanes never interact), so the only cross-device traffic is
+    the initial resharding of freshly-admitted lane state. Typed PRNG key
+    arrays shard like any other leaf (PartitionSpec applies to the visible
+    shape)."""
+    lane = P(mesh_axis)
+    if record == "monitors":
+        fn = shard_map(
+            lambda p, s, k, a, t: _lanes_vmap(static, p, s, k, a, n_ticks,
+                                              record, t),
+            mesh=mesh,
+            in_specs=(P(), lane, lane, lane, lane),
+            out_specs=(lane, lane),
+            **_SHARD_MAP_NOCHECK,
+        )
+        return fn(params, states, gen_keys, active, tel_carry)
+    fn = shard_map(
+        lambda p, s, k, a: _lanes_vmap(static, p, s, k, a, n_ticks, record,
+                                       None),
+        mesh=mesh,
+        in_specs=(P(), lane, lane, lane),
+        out_specs=lane,
+        **_SHARD_MAP_NOCHECK,
+    )
+    return fn(params, states, gen_keys, active)

@@ -132,6 +132,24 @@ class Session:
         return cls(engine=engine, gen_key=key, state=state, monitors=mon,
                    ticks=int(state.t))
 
+    @classmethod
+    def from_snapshot(cls, net: CompiledNetwork | Engine,
+                      snap) -> "Session":
+        """Continue an exported scheduler lane as a solo session.
+
+        The dual of ``LaneScheduler.restore`` for the pool→solo direction:
+        a :class:`~repro.serve.LaneSnapshot` (from ``export`` or
+        ``lifecycle.restore_lane``) carries the lane's cumulative telemetry
+        and flush counters, which land in ``self.monitors`` — so the next
+        flush reports exactly what the still-scheduled tenant's would.
+        """
+        session = cls.create(net, key=snap.gen_key, state=snap.state)
+        session.ticks = snap.ticks
+        if session.monitors is not None and snap.tel is not None:
+            session.monitors.carry = tuple(snap.tel)
+            session.monitors.ticks_since_flush = snap.ticks_since_flush
+        return session
+
     def run(self, n_ticks: int, *, record: str = "monitors", **kw) -> dict:
         """Advance the session ``n_ticks``; returns the chunk's outputs.
 

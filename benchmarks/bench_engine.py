@@ -67,6 +67,7 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
@@ -82,43 +83,15 @@ from repro.core import Engine  # noqa: E402
 from repro.memory import MCU_BUDGET_BYTES  # noqa: E402
 from repro.precision.policy import tree_bytes  # noqa: E402
 
+from benchmarks.timing import (  # noqa: E402
+    interleaved_best,
+    time_cells as _time_cells,
+    us_per_tick as _us_per_tick,
+)
+
 _REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
 BATCHES = (1, 8, 64)
-
-
-def _time_cells(cells, reps: int) -> list[tuple[float, float]]:
-    """(best, median) wall-clock seconds per cell over ``reps``
-    interleaved passes.
-
-    Rep r of every cell runs before rep r+1 of any cell, so each cell's
-    best rep is drawn from the same set of quiet windows — a load spike on
-    the shared container degrades one pass of everything rather than all
-    reps of whichever cell it happened to land on.
-
-    Also asserts seed determinism per cell: each engine closes over a
-    fixed initial state, so the final timed rep must reproduce the warmup
-    raster exactly — a silent RNG or accumulation-order regression fails
-    the bench itself.
-    """
-    # Warm each cell with its OWN tick count: n_steps is a jit static
-    # argname, so a shorter warmup would compile a different cache entry
-    # and the first timed rep would pay full trace+compile.
-    want = [np.asarray(jax.block_until_ready(fn(ticks)))
-            for *_, ticks, fn in cells]
-    times = [[] for _ in cells]
-    last = list(want)
-    for _ in range(reps):
-        for ci, (*_, ticks, fn) in enumerate(cells):
-            t0 = time.perf_counter()
-            last[ci] = jax.block_until_ready(fn(ticks))
-            times[ci].append(time.perf_counter() - t0)
-    for ci, (name, path, backend, batch, record, _, _, _) in enumerate(cells):
-        assert np.array_equal(want[ci], np.asarray(last[ci])), (
-            f"bench harness: same-seed rerun of ({name}, {path}/{backend}, "
-            f"b{batch}, {record}) produced a different result"
-        )
-    return [(min(ts), float(np.median(ts))) for ts in times]
 
 
 def _merge_payload(out_path: str, payload: dict) -> dict:
@@ -201,16 +174,12 @@ def monitor_overhead(n_ticks: int = 1000, reps: int = 20,
         return jax.block_until_ready(
             eng.run(n_ticks, record="both")[1]["telemetry"]["spike_count"])
 
-    fns = (run_none, run_raster, run_mon, run_both)
-    for fn in fns:  # compile + warmup
-        fn()
-    best = [float("inf")] * len(fns)
-    for _ in range(reps):
-        for i, fn in enumerate(fns):
-            t0 = time.perf_counter()
-            fn()
-            best[i] = min(best[i], time.perf_counter() - t0)
-    return min(best[2] / min(best[0], best[1]), best[3] / best[1]) - 1.0
+    best = interleaved_best(
+        {"none": run_none, "raster": run_raster,
+         "monitors": run_mon, "both": run_both},
+        reps, warmup=True)
+    return min(best["monitors"] / min(best["none"], best["raster"]),
+               best["both"] / best["raster"]) - 1.0
 
 
 def _plastic_bytes(net) -> int:
@@ -339,7 +308,7 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
     walls = _time_cells(cells, reps)
     for ((name, path, backend, batch, record, n, ticks, fn),
          (wall, wall_med)) in zip(cells, walls):
-        us_per_tick = wall / ticks * 1e6
+        us_per_tick = _us_per_tick(wall, ticks)
         results.append({
             "net": name,
             "n_neurons": n,
@@ -352,7 +321,7 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
             "wall_s": round(wall, 4),
             "wall_s_median": round(wall_med, 4),
             "us_per_tick": round(us_per_tick, 2),
-            "us_per_tick_median": round(wall_med / ticks * 1e6, 2),
+            "us_per_tick_median": round(_us_per_tick(wall_med, ticks), 2),
             "us_per_tick_per_trial": round(us_per_tick / batch, 2),
             "ticks_per_sec": round(ticks / wall, 1),
             "trial_ticks_per_sec": round(ticks * batch / wall, 1),
@@ -414,7 +383,7 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
             time.sleep(20)
             retry = [c for c in cells if c[0] == x10p]
             rw = _time_cells(retry, max(reps, 2))
-            us = {c[1]: w / c[6] * 1e6 for c, (w, _) in zip(retry, rw)}
+            us = {c[1]: _us_per_tick(w, c[6]) for c, (w, _) in zip(retry, rw)}
             plastic_speedup = max(plastic_speedup,
                                   round(us["packed"] / us["sparse"], 2))
         assert plastic_speedup >= 1.0, (
@@ -445,7 +414,7 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
                      if (n_, p_, b_, r_) == (SYNFIRE4.name, "packed",
                                              1, "raster")]
             rw = _time_cells(retry, max(reps, 2))
-            us = {c[2]: w / c[6] * 1e6 for c, (w, _) in zip(retry, rw)}
+            us = {c[2]: _us_per_tick(w, c[6]) for c, (w, _) in zip(retry, rw)}
             fused_speedup = max(fused_speedup,
                                 round(us["xla"] / us["fused"], 2))
         assert fused_speedup >= 0.85, (

@@ -8,6 +8,12 @@ artifacts exist under results/dryrun.
 the full driver end-to-end in a couple of minutes — it exercises every
 code path (all propagation modes, the ×10 sparse build, the JSON merge)
 without producing publication-grade timings.
+
+Every invocation also exports the run's observability record under
+``results/``: ``obs_trace.jsonl`` + ``obs_trace.chrome.json`` (load the
+latter in Perfetto / chrome://tracing), ``obs_metrics.prom`` (Prometheus
+text snapshot of the runtime and bench metrics), and ``obs_health.json``
+(the SLO verdict vs the paper's M33 real-time and 8.477 MB budgets).
 """
 from __future__ import annotations
 
@@ -32,7 +38,7 @@ def _run(name, fn):
 
 def main(argv: list[str] | None = None) -> None:
     from benchmarks.bench_engine import bench_engine
-    from benchmarks.bench_serve import bench_pool, bench_serve
+    from benchmarks.bench_serve import bench_obs, bench_pool, bench_serve
     from benchmarks.report import paper_report
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -73,11 +79,20 @@ def main(argv: list[str] | None = None) -> None:
             return bench_pool(chunk_ticks=40, n_chunks=1, reps=1,
                               write_json=False, check_determinism=True,
                               check_regression=True, max_tenants=64)
+
+        def obs_fn():
+            # obs-overhead gate: instrumentation must cost < 2% µs/tick on
+            # the 64-lane fleet (same executable both arms — no layout
+            # lottery, so the tight budget is safe), retry-after-cool-down
+            # like every other timing gate
+            return bench_obs(chunk_ticks=50, reps=3, write_json=False,
+                             check_gate=True)
     else:
         engine_fn = bench_engine
         report_fn = paper_report
         serve_fn = bench_serve
         pool_fn = bench_pool
+        obs_fn = bench_obs
 
     results = {}
     for name, fn in [
@@ -89,6 +104,7 @@ def main(argv: list[str] | None = None) -> None:
         ("bench_engine", engine_fn),  # writes/merges BENCH_engine.json
         ("bench_serve", serve_fn),  # serve_* cells, same JSON merge
         ("bench_pool", pool_fn),  # elastic-pool cells (rungs, latencies)
+        ("bench_obs", obs_fn),  # obs on/off overhead (<2% gate in smoke)
         ("paper_report", report_fn),  # accuracy / real-time / energy metrics
     ]:
         results[name] = _run(name, fn)
@@ -115,6 +131,23 @@ def main(argv: list[str] | None = None) -> None:
     with open("results/benchmarks.json", "w") as f:
         json.dump({k: (v[0] if isinstance(v, tuple) else v)
                    for k, v in results.items()}, f, indent=1, default=str)
+
+    _export_obs("results")
+
+
+def _export_obs(out_dir: str) -> None:
+    """Dump the driver run's observability record as CI artifacts: the
+    trace (JSONL + Perfetto-loadable Chrome JSON), the Prometheus text
+    snapshot of every metric the benches and the runtime emitted, and the
+    health verdict against the paper's budgets."""
+    from repro import obs
+
+    obs.tracer().to_jsonl(os.path.join(out_dir, "obs_trace.jsonl"))
+    obs.tracer().to_chrome(os.path.join(out_dir, "obs_trace.chrome.json"))
+    with open(os.path.join(out_dir, "obs_metrics.prom"), "w") as f:
+        f.write(obs.registry().to_prometheus())
+    with open(os.path.join(out_dir, "obs_health.json"), "w") as f:
+        json.dump(obs.health.health_snapshot(), f, indent=1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,95 @@
+"""Shared best-of-N timing harness for the benchmark suite.
+
+One definition of the timing protocol (and of µs/tick — re-exported from
+``repro.obs.metrics.us_per_tick``, the same function the serving runtime
+feeds its latency histograms with), used by ``bench_engine`` and
+``bench_serve`` instead of two hand-rolled copies:
+
+* **Interleaved reps.** Rep r of every cell runs before rep r+1 of any
+  cell, so each cell's best rep is drawn from the same set of quiet
+  windows — a load spike on the shared container degrades one pass of
+  everything rather than all reps of whichever cell it landed on. The
+  best rep is reported (standard practice for throughput kernels); cell
+  sweeps also keep the median so the JSON captures the spread.
+* **Seed determinism.** :func:`time_cells` asserts the final timed rep
+  reproduces the warmup output bit-for-bit — a silent RNG or
+  accumulation-order regression fails the bench itself.
+* **obs emission.** Every timed cell lands in the process metrics
+  registry as a ``repro_bench_us_per_tick`` gauge, so the Prometheus
+  snapshot exported by ``benchmarks/run.py`` carries the bench results
+  next to the runtime's live histograms.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import obs  # noqa: E402
+from repro.obs.metrics import us_per_tick  # noqa: E402
+
+__all__ = ["interleaved_best", "record_cell", "time_cells", "us_per_tick"]
+
+
+def record_cell(cell: str, wall_s: float, ticks: int) -> None:
+    """Publish one timed cell's µs/tick to the obs metrics registry."""
+    obs.gauge("repro_bench_us_per_tick", us_per_tick(wall_s, ticks),
+              cell=cell)
+
+
+def interleaved_best(thunks: dict, reps: int, *,
+                     warmup: bool = False) -> dict:
+    """Best-of-``reps`` wall seconds per thunk, reps interleaved across
+    thunks. Each thunk must block on its own device work (the wall is
+    whatever the thunk spans). ``warmup=True`` runs every thunk once
+    untimed first (compile + page-in)."""
+    keys = list(thunks)
+    if warmup:
+        for k in keys:
+            thunks[k]()
+    best = {k: float("inf") for k in keys}
+    for _ in range(reps):
+        for k in keys:
+            t0 = time.perf_counter()
+            thunks[k]()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return best
+
+
+def time_cells(cells, reps: int) -> list[tuple[float, float]]:
+    """(best, median) wall-clock seconds per cell over ``reps``
+    interleaved passes.
+
+    Cells are ``(name, path, backend, batch, record, n, ticks, fn)``
+    tuples; ``fn(ticks)`` returns a device array the harness blocks on.
+
+    Also asserts seed determinism per cell: each engine closes over a
+    fixed initial state, so the final timed rep must reproduce the warmup
+    output exactly.
+    """
+    # Warm each cell with its OWN tick count: n_steps is a jit static
+    # argname, so a shorter warmup would compile a different cache entry
+    # and the first timed rep would pay full trace+compile.
+    want = [np.asarray(jax.block_until_ready(fn(ticks)))
+            for *_, ticks, fn in cells]
+    times = [[] for _ in cells]
+    last = list(want)
+    for _ in range(reps):
+        for ci, (*_, ticks, fn) in enumerate(cells):
+            t0 = time.perf_counter()
+            last[ci] = jax.block_until_ready(fn(ticks))
+            times[ci].append(time.perf_counter() - t0)
+    for ci, (name, path, backend, batch, record, _, ticks, _) in \
+            enumerate(cells):
+        assert np.array_equal(want[ci], np.asarray(last[ci])), (
+            f"bench harness: same-seed rerun of ({name}, {path}/{backend}, "
+            f"b{batch}, {record}) produced a different result"
+        )
+        record_cell(f"{name}/{path}/{backend}/b{batch}/{record}",
+                    min(times[ci]), ticks)
+    return [(min(ts), float(np.median(ts))) for ts in times]

@@ -1,0 +1,98 @@
+"""Observability: trace, metrics, and health for a serving pool under load.
+
+What the operator of a `repro.serve` deployment actually sees — the
+``repro.obs`` plane riding a 3-tenant pool through an up-rung migration:
+
+1. Admit three tenants into a ``ServePool`` with rungs (2, 8). The third
+   admission overflows rung 2, so the ladder migrates the whole fleet up
+   mid-admission — ``rung_migrate`` span, ``export``/``restore`` per
+   lane, rung-bytes gauges re-pointed, all recorded as it happens.
+2. Serve chunks and flush. Every chunk dispatch lands in the
+   ``repro_serve_chunk_latency_ms`` / ``repro_serve_us_per_tick``
+   histograms; jit dispatches are classified compile vs cache hit.
+3. Dump the flight recorder: a JSONL trace, a Chrome trace you can open
+   at https://ui.perfetto.dev, the Prometheus text snapshot, and the
+   health verdict against the paper's budgets (real-time factor on the
+   Cortex-M33 spec, per-rung bytes vs the 8.477 MB MCU ceiling).
+
+Observability is default-on and host-side only — device programs and
+results are bitwise identical with it off (``tests/test_obs.py``), and
+the serving overhead is gated < 2% in CI (``benchmarks/run.py --smoke``).
+
+  PYTHONPATH=src python examples/observability.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import obs
+from repro.configs.synfire4 import SYNFIRE4_MINI, build_synfire
+from repro.serve import ServePool
+
+CHUNK = 100  # ticks per serving chunk (= 100 ms of model time)
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def main() -> None:
+    obs.configure(reset=True, enabled=True)  # start a clean flight record
+
+    net = build_synfire(SYNFIRE4_MINI, policy="fp16")
+    pool = ServePool(rungs=(2, 8))
+
+    # Two tenants fit rung 2; the third admission forces the up-rung
+    # migration (export 2 lanes -> build rung 8 -> restore 2 lanes) before
+    # taking its seat. Watch it happen in the trace.
+    for i in range(3):
+        fp = pool.admit(net, f"tenant{i}", seed=i)
+        lad = pool.ladder_of(f"tenant{i}")
+        print(f"admit tenant{i}: fingerprint {fp[:8]}, rung {lad.rung}, "
+              f"migrations so far {lad.migrations}")
+
+    # Enough chunks that the one-off compile chunk falls outside the p95
+    # window of the measured-serve health check (it is host dispatch wall,
+    # merged across all chunks — including the first, compiling one).
+    for _ in range(24):
+        pool.step(CHUNK)
+    for sid in pool.session_ids:
+        f = pool.flush(sid)
+        print(f"flush {sid}: {int(f['spike_count'].sum())} spikes "
+              f"over {f['n_ticks']} ticks")
+
+    # -- the operator's view ------------------------------------------------
+    os.makedirs(OUT_DIR, exist_ok=True)
+    trace_jsonl = os.path.join(OUT_DIR, "observability_trace.jsonl")
+    trace_chrome = os.path.join(OUT_DIR, "observability_trace.chrome.json")
+    prom_path = os.path.join(OUT_DIR, "observability_metrics.prom")
+
+    obs.tracer().to_jsonl(trace_jsonl)
+    obs.tracer().to_chrome(trace_chrome)
+    with open(prom_path, "w") as f:
+        f.write(obs.registry().to_prometheus())
+
+    reg = obs.registry()
+    lat = reg.histogram("repro_serve_chunk_latency_ms")
+    n_chunks = int(sum(s[2] for s in lat.series().values()))
+    n_compiles = int(sum(reg.counter("repro_compiles_total")
+                         .series().values()))
+    n_up = int(reg.counter("repro_rung_migrations_total")
+               .value(direction="up"))
+    print(f"\nchunks served: {n_chunks}, p95 latency "
+          f"{lat.quantile(0.95):.1f} ms; "
+          f"compiles {n_compiles}, migrations {n_up} up")
+    print(f"trace: {len(obs.tracer())} events "
+          f"(dropped {obs.tracer().dropped}) -> {trace_jsonl}")
+    print(f"chrome trace (open in Perfetto): {trace_chrome}")
+    print(f"prometheus snapshot: {prom_path}")
+
+    health = obs.health.health_snapshot(net)
+    print(f"\nhealth: {health['status']} on {health['hardware']}")
+    for check in health["checks"]:
+        print(f"  [{check['status']:4s}] {check['name']}: {check['detail']}")
+    with open(os.path.join(OUT_DIR, "observability_health.json"), "w") as f:
+        json.dump(health, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -79,6 +79,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import backend as be
 from repro.core import neurons as nrn
 from repro.kernels import ops as kops
@@ -710,14 +711,37 @@ class Engine:
 
     def run(self, n_steps: int, state: NetState | None = None, **kw):
         state = state if state is not None else self.net.state0
-        return run(self.net.static, self.net.params, state, n_steps, **kw)
+        if not obs.enabled():
+            return run(self.net.static, self.net.params, state, n_steps,
+                       **kw)
+        # Host-side span around the jit DISPATCH only — nothing inside the
+        # traced computation changes, so results are bitwise identical
+        # with obs on/off (tests/test_obs.py). The cache probe before vs
+        # after the dispatch classifies it compile vs cache hit.
+        before = obs.jit_cache_size(run)
+        with obs.span("engine_run", n_ticks=n_steps,
+                      record=str(kw.get("record", "raster"))):
+            out = run(self.net.static, self.net.params, state, n_steps,
+                      **kw)
+        obs.note_dispatch("engine.run", run, before)
+        obs.inc("repro_engine_ticks_total", float(n_steps))
+        return out
 
     def run_batch(self, n_steps: int, batch: int,
                   state: NetState | None = None, **kw):
         """B independent trials in one device program; see :func:`run_batch`."""
         state = state if state is not None else self.net.state0
-        return run_batch(self.net.static, self.net.params, state, n_steps,
-                         batch, **kw)
+        if not obs.enabled():
+            return run_batch(self.net.static, self.net.params, state,
+                             n_steps, batch, **kw)
+        before = obs.jit_cache_size(run_batch)
+        with obs.span("engine_run", n_ticks=n_steps, batch=batch,
+                      record=str(kw.get("record", "raster"))):
+            out = run_batch(self.net.static, self.net.params, state,
+                            n_steps, batch, **kw)
+        obs.note_dispatch("engine.run_batch", run_batch, before)
+        obs.inc("repro_engine_ticks_total", float(n_steps) * batch)
+        return out
 
     def spike_counts(self, n_steps: int, **kw) -> jax.Array:
         _, out = self.run(n_steps, **kw)

@@ -15,6 +15,7 @@ import dataclasses
 from contextlib import contextmanager
 from typing import Any, Iterator
 
+from repro import obs
 from repro.precision.policy import tree_bytes
 
 __all__ = [
@@ -88,13 +89,38 @@ class MemoryLedger:
                 f"(used {self.total_used / 1024**2:.3f} MB)"
             )
         self._entries.append(_Entry(stage=stage, name=name, nbytes=nbytes))
+        self._obs_sync()
         return nbytes
 
     def release(self, name: str) -> int:
         """Remove entries registered under ``name`` (freeing memory)."""
         freed = sum(e.nbytes for e in self._entries if e.name == name)
         self._entries = [e for e in self._entries if e.name != name]
+        self._obs_sync()
         return freed
+
+    def _obs_sync(self) -> None:
+        """Republish this ledger's live bytes as obs gauges (per name,
+        per stage, total, per serving rung). Stale series from released
+        registrations are dropped first, so the gauges always mirror
+        ``name_bytes()`` exactly — including after a rung migration sheds
+        its old lanes."""
+        if not obs.enabled():
+            return
+        for g in ("repro_ledger_bytes", "repro_ledger_stage_bytes",
+                  "repro_ledger_total_bytes", "repro_serve_rung_bytes"):
+            obs.remove_gauge(g, ledger=self.name)
+        for name, nb in self.name_bytes().items():
+            obs.gauge("repro_ledger_bytes", float(nb),
+                      ledger=self.name, name=name)
+        for stage, nb in self.stage_bytes().items():
+            obs.gauge("repro_ledger_stage_bytes", float(nb),
+                      ledger=self.name, stage=stage)
+        obs.gauge("repro_ledger_total_bytes", float(self.total_used),
+                  ledger=self.name)
+        for rung, nb in self.serve_rung_bytes().items():
+            obs.gauge("repro_serve_rung_bytes", float(nb),
+                      ledger=self.name, rung=rung or "unkeyed")
 
     # -- queries ----------------------------------------------------------------
     @property

@@ -1,0 +1,186 @@
+"""repro.obs — the operational observability plane.
+
+``repro.telemetry`` measures the *simulation* (spike counts, rates,
+in-scan monitor carries — scientific telemetry that rides the device
+program). This package measures the *runtime*: admit/evict latency,
+chunk dispatch wall time, jit compile-cache behavior, lane occupancy,
+ledger bytes against the paper's budgets. Three submodules:
+
+* :mod:`repro.obs.trace`   — bounded ring-buffer spans/events, JSONL +
+  Chrome-trace (Perfetto) exporters.
+* :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket histograms
+  with Prometheus text and JSON snapshot exporters.
+* :mod:`repro.obs.health`  — SLO snapshots: live metrics vs the paper's
+  budgets (real-time factor on the M33 spec, per-rung bytes vs the
+  8.477 MB MCU ceiling). Imported lazily — it pulls in ``repro.memory``
+  and ``repro.core.sizing``, which themselves may import this package.
+
+This module is the facade the instrumented runtime calls: a process-wide
+tracer + registry behind module functions (:func:`span`, :func:`event`,
+:func:`inc`, :func:`gauge`, :func:`observe`) that collapse to near-free
+no-ops when disabled. Observability is **default-on** (disable with
+``obs.configure(enabled=False)`` or ``REPRO_OBS=0``) because it is
+host-side only: spans wrap jit *dispatch* and scheduler bookkeeping,
+never traced computation, so device programs, rasters, and weights are
+bitwise identical with obs on or off — asserted by ``tests/test_obs.py``
+and the <2% overhead gate in ``benchmarks/run.py --smoke``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+from repro.obs.metrics import MetricsRegistry, us_per_tick
+from repro.obs.trace import Tracer
+
+__all__ = [
+    "configure",
+    "enabled",
+    "event",
+    "gauge",
+    "inc",
+    "jit_cache_size",
+    "note_dispatch",
+    "observe",
+    "registry",
+    "remove_gauge",
+    "span",
+    "tracer",
+    "us_per_tick",
+]
+
+
+def _env_enabled() -> bool:
+    return os.environ.get("REPRO_OBS", "1").strip().lower() not in (
+        "0", "false", "off", "no")
+
+
+_enabled: bool = _env_enabled()
+_tracer = Tracer()
+_registry = MetricsRegistry()
+
+
+def enabled() -> bool:
+    """Whether instrumentation currently records anything."""
+    return _enabled
+
+
+def configure(*, enabled: bool | None = None,
+              trace_capacity: int | None = None,
+              reset: bool = False) -> None:
+    """Reconfigure the process-global plane.
+
+    ``enabled`` flips recording (the instrumentation hooks stay in place
+    either way — disabled they cost one predicate per call site);
+    ``trace_capacity`` rebuilds the tracer ring at a new size;
+    ``reset=True`` drops all recorded events and metric series (tests and
+    examples start clean this way).
+    """
+    global _enabled, _tracer, _registry
+    if reset:
+        _tracer = Tracer(trace_capacity or _tracer.capacity)
+        _registry = MetricsRegistry()
+    elif trace_capacity is not None and trace_capacity != _tracer.capacity:
+        _tracer = Tracer(trace_capacity)
+    if enabled is not None:
+        _enabled = bool(enabled)
+
+
+def tracer() -> Tracer:
+    return _tracer
+
+
+def registry() -> MetricsRegistry:
+    return _registry
+
+
+class _NoopSpan:
+    """`with obs.span(...) as sp:` yields None when disabled — call sites
+    key their metric emission on that, so the disabled path allocates
+    nothing beyond the argument dict."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> None:
+        return None
+
+    def __exit__(self, *exc: Any) -> bool:
+        return False
+
+
+_NOOP_SPAN = _NoopSpan()
+
+
+def span(name: str, **args: Any):
+    """Record a span around the with-body; yields the live span (with
+    ``dur_s`` set on exit) or None when disabled."""
+    if not _enabled:
+        return _NOOP_SPAN
+    return _tracer.span(name, **args)
+
+
+def event(name: str, **args: Any) -> None:
+    if _enabled:
+        _tracer.event(name, **args)
+
+
+def inc(_metric: str, value: float = 1.0, **labels: Any) -> None:
+    if _enabled:
+        _registry.counter(_metric).inc(value, **labels)
+
+
+def gauge(_metric: str, value: float, **labels: Any) -> None:
+    # First param deliberately avoids the name "name": labels may carry a
+    # ``name=...`` dimension (the ledger's per-registration gauge does).
+    if _enabled:
+        _registry.gauge(_metric).set(value, **labels)
+
+
+def remove_gauge(_metric: str, **labels: Any) -> None:
+    """Drop gauge series whose labels include the given subset (close /
+    teardown hygiene — runs even when disabled so a close under
+    ``enabled=False`` still clears series recorded while enabled)."""
+    g = _registry.get(_metric)
+    if g is not None and g.kind == "gauge":
+        g.clear_where(**labels)
+
+
+def observe(_metric: str, value: float, **labels: Any) -> None:
+    if _enabled:
+        _registry.histogram(_metric).observe(value, **labels)
+
+
+# -- jit compile-cache probes ----------------------------------------------
+def jit_cache_size(fn: Any) -> int | None:
+    """Compiled-program cache entry count of a ``jax.jit`` callable, or
+    None (disabled, or the attribute is unavailable in this jax)."""
+    if not _enabled:
+        return None
+    try:
+        return fn._cache_size()
+    except Exception:
+        return None
+
+
+def note_dispatch(site: str, fn: Any, before: int | None) -> None:
+    """Classify the jit dispatch that just ran: cache grew → ``compile``
+    event + counter; otherwise a ``jit_cache_hit``. ``before`` is the
+    :func:`jit_cache_size` taken before the dispatch."""
+    if not _enabled or before is None:
+        return
+    after = jit_cache_size(fn)
+    if after is None:
+        return
+    if after > before:
+        _tracer.event("compile", site=site)
+        _registry.counter("repro_compiles_total").inc(site=site)
+    else:
+        _tracer.event("jit_cache_hit", site=site)
+        _registry.counter("repro_jit_cache_hits_total").inc(site=site)
+
+
+def __getattr__(name: str):
+    if name == "health":  # lazy: health imports repro.memory/core.sizing
+        import repro.obs.health as health
+        return health
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -23,6 +23,7 @@ See ``examples/edge_serving.py`` and the README's "Serving sessions at
 the edge" / "Serving at scale" sections for the end-to-end shape.
 """
 from repro.serve.lifecycle import (
+    CheckpointError,
     latest_session_step,
     restore_lane,
     restore_session,
@@ -40,6 +41,7 @@ from repro.serve.session import Session, SessionMonitors
 
 __all__ = [
     "CapacityLadder",
+    "CheckpointError",
     "Evicted",
     "LaneScheduler",
     "LaneSnapshot",

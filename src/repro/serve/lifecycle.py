@@ -26,15 +26,25 @@ never stopped (hypothesis-asserted for plastic and non-plastic nets in
 fp32 and fp16, ``tests/test_serve.py``). Typed PRNG keys are packed to
 their ``uint32`` key data on save and re-wrapped on restore (npz cannot
 hold extended dtypes).
+
+Every save stamps a ``fmt`` format-version leaf; restore validates the
+file *before* touching the payload and raises :class:`CheckpointError`
+(carrying the offending path and key) for corrupt/truncated archives,
+missing payload keys, or a format the build doesn't read — alongside a
+``checkpoint_restore`` failure event on the obs trace, so a serving
+process that hits a bad checkpoint leaves a diagnosable record instead of
+a bare ``KeyError`` from inside npz internals.
 """
 from __future__ import annotations
 
 import os
+import zipfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import ckpt
 from repro.core.engine import Engine
 from repro.core.network import CompiledNetwork
@@ -42,8 +52,28 @@ from repro.serve.scheduler import LaneSnapshot
 from repro.serve.session import Session
 from repro.telemetry import monitors as tel
 
-__all__ = ["save_session", "restore_session", "latest_session_step",
-           "save_lane", "restore_lane"]
+__all__ = ["CheckpointError", "save_session", "restore_session",
+           "latest_session_step", "save_lane", "restore_lane"]
+
+#: Format version stamped into every lifecycle checkpoint. Bump when the
+#: payload layout changes incompatibly; restore refuses other versions.
+_CKPT_FORMAT = 1
+
+
+class CheckpointError(RuntimeError):
+    """A lifecycle checkpoint could not be read back.
+
+    Raised for corrupt/truncated npz archives, payloads missing a
+    required key, and format-version mismatches. ``path`` is the
+    checkpoint file; ``key`` names the implicated payload key when one
+    is (``"fmt"`` for version problems, the missing leaf key otherwise).
+    """
+
+    def __init__(self, message: str, *, path: str | None = None,
+                 key: str | None = None):
+        super().__init__(message)
+        self.path = path
+        self.key = key
 
 
 def _is_key(leaf) -> bool:
@@ -77,6 +107,51 @@ def _tel_template(static) -> tuple:
     )
 
 
+def _ckpt_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:010d}.npz")
+
+
+def _fail(message: str, *, path: str, key: str | None = None):
+    """Record the failure on the obs plane, then raise the typed error."""
+    obs.event("checkpoint_restore", status="error", path=path,
+              key=key or "", reason=message)
+    obs.inc("repro_checkpoint_restores_total", status="error")
+    raise CheckpointError(f"{message} [{path}]", path=path, key=key)
+
+
+def _inspect(ckpt_dir: str, step: int) -> bool:
+    """Validate a checkpoint file before restoring from it; returns
+    whether it holds telemetry accumulators (a session can be saved
+    before its first chunk, or over a monitor-free network — the restore
+    template must mirror what was actually written)."""
+    path = _ckpt_path(ckpt_dir, step)
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            files = set(data.files)
+            fmt = int(data["['fmt']"]) if "['fmt']" in files else None
+            has_tel = any(k.startswith("['tel']") for k in files)
+    except FileNotFoundError:
+        raise  # a missing file is not a *bad* file
+    except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+        _fail(f"corrupt or truncated checkpoint: {e}", path=path)
+    if fmt is None:
+        _fail("checkpoint has no format stamp (foreign or pre-versioning "
+              "writer)", path=path, key="fmt")
+    if fmt != _CKPT_FORMAT:
+        _fail(f"unsupported checkpoint format {fmt} "
+              f"(this build reads {_CKPT_FORMAT})", path=path, key="fmt")
+    return has_tel
+
+
+def _restore_payload(ckpt_dir: str, step: int, like: dict) -> dict:
+    """``ckpt.restore`` with missing-key errors typed and path-tagged."""
+    try:
+        return ckpt.restore(ckpt_dir, step, like)
+    except KeyError as e:
+        _fail(f"checkpoint missing payload key {e.args[0]!r}",
+              path=_ckpt_path(ckpt_dir, step), key=str(e.args[0]))
+
+
 def save_session(ckpt_dir: str, session: Session, *,
                  step: int | None = None) -> str:
     """Atomically persist a session; returns the checkpoint path.
@@ -86,6 +161,7 @@ def save_session(ckpt_dir: str, session: Session, *,
     """
     has_tel = session.monitors is not None and session.monitors.carry is not None
     payload = {
+        "fmt": np.int32(_CKPT_FORMAT),
         "state": _pack_keys(session.state),
         "gen_key": jax.random.key_data(session.gen_key),
         "ticks": np.int32(session.ticks),
@@ -93,8 +169,11 @@ def save_session(ckpt_dir: str, session: Session, *,
         "tel_ticks": np.int32(session.monitors.ticks_since_flush
                               if has_tel else 0),
     }
-    return ckpt.save(ckpt_dir, step if step is not None else session.ticks,
-                     payload)
+    step = step if step is not None else session.ticks
+    with obs.span("checkpoint_save", kind="session", step=step):
+        path = ckpt.save(ckpt_dir, step, payload)
+    obs.inc("repro_checkpoint_saves_total", kind="session")
+    return path
 
 
 def restore_session(ckpt_dir: str, net: CompiledNetwork | Engine, *,
@@ -112,22 +191,24 @@ def restore_session(ckpt_dir: str, net: CompiledNetwork | Engine, *,
         step = ckpt.latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no session checkpoints in {ckpt_dir}")
-    has_tel = _file_has_tel(ckpt_dir, step)
-    like = {
-        "state": _pack_keys(engine.net.state0),
-        "gen_key": jax.random.key_data(jax.random.key(0)),
-        "ticks": np.int32(0),
-        "tel": _tel_template(static) if has_tel else (),
-        "tel_ticks": np.int32(0),
-    }
-    payload = ckpt.restore(ckpt_dir, step, like)
-    session = Session.create(
-        engine, key=_wrap(payload["gen_key"]),
-        state=_unpack_keys(payload["state"], engine.net.state0))
-    session.ticks = int(payload["ticks"])
-    if session.monitors is not None and has_tel:
-        session.monitors.carry = tuple(payload["tel"])
-        session.monitors.ticks_since_flush = int(payload["tel_ticks"])
+    with obs.span("checkpoint_restore", kind="session", step=step):
+        has_tel = _inspect(ckpt_dir, step)
+        like = {
+            "state": _pack_keys(engine.net.state0),
+            "gen_key": jax.random.key_data(jax.random.key(0)),
+            "ticks": np.int32(0),
+            "tel": _tel_template(static) if has_tel else (),
+            "tel_ticks": np.int32(0),
+        }
+        payload = _restore_payload(ckpt_dir, step, like)
+        session = Session.create(
+            engine, key=_wrap(payload["gen_key"]),
+            state=_unpack_keys(payload["state"], engine.net.state0))
+        session.ticks = int(payload["ticks"])
+        if session.monitors is not None and has_tel:
+            session.monitors.carry = tuple(payload["tel"])
+            session.monitors.ticks_since_flush = int(payload["tel_ticks"])
+    obs.inc("repro_checkpoint_restores_total", status="ok")
     return session
 
 
@@ -139,6 +220,7 @@ def save_lane(ckpt_dir: str, snap: LaneSnapshot, *,
     down to the flush accounting. Same atomic npz writer as
     :func:`save_session`; ``step`` defaults to the lane's tick cursor."""
     payload = {
+        "fmt": np.int32(_CKPT_FORMAT),
         "session_id": np.frombuffer(snap.session_id.encode(), np.uint8),
         "state": _pack_keys(snap.state),
         "gen_key": jax.random.key_data(snap.gen_key),
@@ -146,8 +228,11 @@ def save_lane(ckpt_dir: str, snap: LaneSnapshot, *,
         "tel": snap.tel if snap.tel is not None else (),
         "tel_ticks": np.int32(snap.ticks_since_flush),
     }
-    return ckpt.save(ckpt_dir, step if step is not None else snap.ticks,
-                     payload)
+    step = step if step is not None else snap.ticks
+    with obs.span("checkpoint_save", kind="lane", step=step):
+        path = ckpt.save(ckpt_dir, step, payload)
+    obs.inc("repro_checkpoint_saves_total", kind="lane")
+    return path
 
 
 def restore_lane(ckpt_dir: str, net: CompiledNetwork | Engine, *,
@@ -161,35 +246,29 @@ def restore_lane(ckpt_dir: str, net: CompiledNetwork | Engine, *,
         step = ckpt.latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no lane checkpoints in {ckpt_dir}")
-    has_tel = _file_has_tel(ckpt_dir, step)
-    like = {
-        "session_id": np.zeros((0,), np.uint8),
-        "state": _pack_keys(engine.net.state0),
-        "gen_key": jax.random.key_data(jax.random.key(0)),
-        "ticks": np.int32(0),
-        "tel": _tel_template(static) if has_tel else (),
-        "tel_ticks": np.int32(0),
-    }
-    payload = ckpt.restore(ckpt_dir, step, like)
-    return LaneSnapshot(
-        session_id=bytes(np.asarray(payload["session_id"])).decode(),
-        state=_unpack_keys(payload["state"], engine.net.state0),
-        gen_key=_wrap(payload["gen_key"]),
-        tel=tuple(payload["tel"]) if has_tel else None,
-        ticks=int(payload["ticks"]),
-        ticks_since_flush=int(payload["tel_ticks"]),
-    )
+    with obs.span("checkpoint_restore", kind="lane", step=step):
+        has_tel = _inspect(ckpt_dir, step)
+        like = {
+            "session_id": np.zeros((0,), np.uint8),
+            "state": _pack_keys(engine.net.state0),
+            "gen_key": jax.random.key_data(jax.random.key(0)),
+            "ticks": np.int32(0),
+            "tel": _tel_template(static) if has_tel else (),
+            "tel_ticks": np.int32(0),
+        }
+        payload = _restore_payload(ckpt_dir, step, like)
+        snap = LaneSnapshot(
+            session_id=bytes(np.asarray(payload["session_id"])).decode(),
+            state=_unpack_keys(payload["state"], engine.net.state0),
+            gen_key=_wrap(payload["gen_key"]),
+            tel=tuple(payload["tel"]) if has_tel else None,
+            ticks=int(payload["ticks"]),
+            ticks_since_flush=int(payload["tel_ticks"]),
+        )
+    obs.inc("repro_checkpoint_restores_total", status="ok")
+    return snap
 
 
 def latest_session_step(ckpt_dir: str) -> int | None:
     """Newest saved session step (tick cursor), or None."""
     return ckpt.latest_step(ckpt_dir)
-
-
-def _file_has_tel(ckpt_dir: str, step: int) -> bool:
-    """Whether the checkpoint holds telemetry accumulators (a session can
-    be saved before its first chunk, or over a monitor-free network — the
-    restore template must mirror what was actually written)."""
-    path = os.path.join(ckpt_dir, f"step_{step:010d}.npz")
-    with np.load(path, allow_pickle=False) as data:
-        return any(k.startswith("['tel']") for k in data.files)

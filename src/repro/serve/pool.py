@@ -41,6 +41,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import obs
 from repro.core.network import CompiledNetwork, NetState
 from repro.serve.scheduler import Evicted, LaneScheduler, LaneSnapshot
 
@@ -129,23 +130,30 @@ class CapacityLadder:
         mesh = self.mesh
         if mesh is not None and n % mesh.shape[self.mesh_axis]:
             mesh = None  # rung smaller than the mesh: run unsharded
-        return LaneScheduler(
-            self.net, n, record=self.record, mesh=mesh,
-            mesh_axis=self.mesh_axis,
-            ledger_key=f"{self.ledger_prefix}rung{n}")
+        with obs.span("rung_build", rung=n,
+                      ledger_key=f"{self.ledger_prefix}rung{n}"):
+            return LaneScheduler(
+                self.net, n, record=self.record, mesh=mesh,
+                mesh_axis=self.mesh_axis,
+                ledger_key=f"{self.ledger_prefix}rung{n}")
 
     def _migrate(self, new_rung: int) -> None:
         """Move the whole fleet to ``new_rung`` through raw lane snapshots
         — no flush, no RNG perturbation, no telemetry drain; the old
         rung's ledger registration is released. Revisiting a rung size
         reuses its jit-cached program (same static config + shapes)."""
-        snaps: list[LaneSnapshot] = []
-        if self._sched is not None:
-            snaps = self._sched.export_all()
-            self._sched.close()
-        self._sched = self._build(new_rung)
-        for snap in snaps:
-            self._sched.restore(snap)
+        old_rung = self._sched.capacity if self._sched else 0
+        with obs.span("rung_migrate", from_rung=old_rung, to_rung=new_rung,
+                      tenants=self.occupancy):
+            snaps: list[LaneSnapshot] = []
+            if self._sched is not None:
+                snaps = self._sched.export_all()
+                self._sched.close()
+            self._sched = self._build(new_rung)
+            for snap in snaps:
+                self._sched.restore(snap)
+        obs.inc("repro_rung_migrations_total",
+                direction="up" if new_rung > old_rung else "down")
         self.migrations += 1
         self._idle_steps = 0
 
@@ -253,6 +261,8 @@ class ServePool:
         if session_id in self._routes:
             raise ValueError(f"session id {session_id!r} already admitted")
         fp, ladder = self._ladder_for(net)
+        obs.event("route", session=session_id, fingerprint=fp[:8])
+        obs.inc("repro_pool_routes_total", fingerprint=fp[:8])
         ladder.admit(session_id, seed=seed, key=key, state=state)
         self._routes[session_id] = fp
         return fp
@@ -284,6 +294,8 @@ class ServePool:
             raise ValueError(
                 f"session id {snap.session_id!r} already admitted")
         fp, ladder = self._ladder_for(net)
+        obs.event("route", session=snap.session_id, fingerprint=fp[:8])
+        obs.inc("repro_pool_routes_total", fingerprint=fp[:8])
         ladder.restore(snap)
         self._routes[snap.session_id] = fp
         return fp

@@ -65,8 +65,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.core.distributed import _SHARD_MAP_NOCHECK, shard_map
 from repro.core.engine import _run_impl
+from repro.obs.metrics import us_per_tick
 from repro.core.network import CompiledNetwork, NetState
 from repro.precision.policy import tree_bytes
 from repro.telemetry import monitors as tel
@@ -188,18 +190,33 @@ class LaneScheduler:
         suffix = f".{ledger_key}" if ledger_key else ""
         self._ledger_names = (f"serve.lanes{suffix}",
                               f"serve.telemetry{suffix}")
+        # The label the obs plane files this scheduler's series under:
+        # the ledger key when namespaced (a ladder rung), else the bare
+        # capacity — stable across the scheduler's lifetime.
+        self._obs_rung = ledger_key or f"cap{capacity}"
         for name in self._ledger_names:
             net.ledger.release(name)
         with net.ledger.stage("8. Serve Lanes"):
             net.ledger.register(self._ledger_names[0], self.states)
             if self._tel:
                 net.ledger.register(self._ledger_names[1], self._tel)
+        if obs.enabled():
+            self._obs_occupancy()
 
     def close(self) -> None:
         """Drop this scheduler's ledger registrations (a ladder migrating
         off a rung frees its lane bytes; the arrays die with the object)."""
         for name in self._ledger_names:
             self.net.ledger.release(name)
+        for gauge in ("repro_serve_lane_occupancy",
+                      "repro_serve_lane_capacity"):
+            obs.remove_gauge(gauge, rung=self._obs_rung)
+
+    def _obs_occupancy(self) -> None:
+        obs.gauge("repro_serve_lane_occupancy", float(self.occupancy),
+                  rung=self._obs_rung)
+        obs.gauge("repro_serve_lane_capacity", float(self.capacity),
+                  rung=self._obs_rung)
 
     # -- occupancy ------------------------------------------------------------
     @property
@@ -239,6 +256,15 @@ class LaneScheduler:
         session (an evicted lane, a solo ``Session.state``, or a restored
         checkpoint) instead of the network's fresh ``state0``.
         """
+        with obs.span("admit", rung=self._obs_rung, session=session_id):
+            lane = self._admit_impl(session_id, seed=seed, key=key,
+                                    state=state)
+        if obs.enabled():
+            obs.inc("repro_serve_admits_total", rung=self._obs_rung)
+            self._obs_occupancy()
+        return lane
+
+    def _admit_impl(self, session_id: str, *, seed, key, state) -> int:
         if not self.free_lanes:
             raise RuntimeError(
                 f"scheduler full ({self.capacity} lanes) — evict before "
@@ -287,12 +313,16 @@ class LaneScheduler:
         telemetry — for a move that must preserve flush accounting (rung
         migration), use :meth:`export` instead.
         """
-        lane = self.lane_of(session_id)
-        state = _read_lane(self.states, lane)
-        gen_key = self.gen_keys[lane]
-        final = self.flush(session_id) if self._tel else None
-        self.active = self.active.at[lane].set(False)
-        self._lanes[lane] = None
+        with obs.span("evict", rung=self._obs_rung, session=session_id):
+            lane = self.lane_of(session_id)
+            state = _read_lane(self.states, lane)
+            gen_key = self.gen_keys[lane]
+            final = self.flush(session_id) if self._tel else None
+            self.active = self.active.at[lane].set(False)
+            self._lanes[lane] = None
+        if obs.enabled():
+            obs.inc("repro_serve_evicts_total", rung=self._obs_rung)
+            self._obs_occupancy()
         return Evicted(state=state, gen_key=gen_key, flush=final)
 
     # -- migration ------------------------------------------------------------
@@ -307,40 +337,47 @@ class LaneScheduler:
         counts/levels the unmoved tenant's would. The vacated lane keeps
         stale carry values until the next admit, which zeroes them.
         """
-        lane = self.lane_of(session_id)
-        tel_lane = None
-        if self._tel:
-            raw = _read_lane(self._tel, lane)
-            tel_lane = tuple(
-                c if isinstance(s, tel.CUMULATIVE) else ()
-                for s, c in zip(self.net.static.monitors, raw)
+        with obs.span("export", rung=self._obs_rung, session=session_id):
+            lane = self.lane_of(session_id)
+            tel_lane = None
+            if self._tel:
+                raw = _read_lane(self._tel, lane)
+                tel_lane = tuple(
+                    c if isinstance(s, tel.CUMULATIVE) else ()
+                    for s, c in zip(self.net.static.monitors, raw)
+                )
+            snap = LaneSnapshot(
+                session_id=session_id,
+                state=_read_lane(self.states, lane),
+                gen_key=self.gen_keys[lane],
+                tel=tel_lane,
+                ticks=self._lanes[lane].ticks,
+                ticks_since_flush=self._ticks_since_flush[lane],
             )
-        snap = LaneSnapshot(
-            session_id=session_id,
-            state=_read_lane(self.states, lane),
-            gen_key=self.gen_keys[lane],
-            tel=tel_lane,
-            ticks=self._lanes[lane].ticks,
-            ticks_since_flush=self._ticks_since_flush[lane],
-        )
-        self.active = self.active.at[lane].set(False)
-        self._lanes[lane] = None
+            self.active = self.active.at[lane].set(False)
+            self._lanes[lane] = None
+        if obs.enabled():
+            obs.inc("repro_serve_exports_total", rung=self._obs_rung)
+            self._obs_occupancy()
         return snap
 
     def restore(self, snap: LaneSnapshot) -> int:
         """Admit an exported lane, carrying its telemetry accumulators and
         flush counters through — the receiving half of a migration."""
-        lane = self.admit(snap.session_id, key=snap.gen_key,
-                          state=snap.state)
-        if self._tel and snap.tel is not None:
-            cur = _read_lane(self._tel, lane)
-            merged = tuple(
-                s_snap if isinstance(spec, tel.CUMULATIVE) else s_cur
-                for spec, s_snap, s_cur in zip(self.net.static.monitors,
-                                               snap.tel, cur)
-            )
-            self._tel = _write_lane(self._tel, lane, merged)
-        self._ticks_since_flush[lane] = snap.ticks_since_flush
+        with obs.span("restore", rung=self._obs_rung,
+                      session=snap.session_id):
+            lane = self.admit(snap.session_id, key=snap.gen_key,
+                              state=snap.state)
+            if self._tel and snap.tel is not None:
+                cur = _read_lane(self._tel, lane)
+                merged = tuple(
+                    s_snap if isinstance(spec, tel.CUMULATIVE) else s_cur
+                    for spec, s_snap, s_cur in zip(self.net.static.monitors,
+                                                   snap.tel, cur)
+                )
+                self._tel = _write_lane(self._tel, lane, merged)
+            self._ticks_since_flush[lane] = snap.ticks_since_flush
+        obs.inc("repro_serve_restores_total", rung=self._obs_rung)
         return lane
 
     def export_all(self) -> list[LaneSnapshot]:
@@ -358,6 +395,25 @@ class LaneScheduler:
         With a mesh, the lane axis is shard_map-partitioned across devices
         — zero collectives, bit-identical per lane to the unsharded step.
         """
+        if not obs.enabled():
+            return self._step_impl(n_ticks)
+        # Span wraps jit *dispatch*, not traced computation — the program
+        # and its outputs are bitwise identical with obs on or off.
+        occ = self.occupancy
+        fn = _step_lanes if self.mesh is None else _step_lanes_sharded
+        before = obs.jit_cache_size(fn)
+        with obs.span("step_chunk", rung=self._obs_rung, n_ticks=n_ticks,
+                      occupancy=occ) as sp:
+            self._step_impl(n_ticks)
+        obs.note_dispatch("serve.step_lanes", fn, before)
+        obs.observe("repro_serve_chunk_latency_ms", sp.dur_s * 1e3,
+                    scope="scheduler", rung=self._obs_rung)
+        obs.observe("repro_serve_us_per_tick", us_per_tick(sp.dur_s, n_ticks),
+                    scope="scheduler", rung=self._obs_rung)
+        obs.inc("repro_serve_ticks_total", float(n_ticks * occ),
+                rung=self._obs_rung)
+
+    def _step_impl(self, n_ticks: int) -> None:
         tel_in = (self._chunk_tel(n_ticks),) if self._tel else ()
         if self.mesh is None:
             out = _step_lanes(self.static, self.net.params, self.states,
@@ -397,11 +453,13 @@ class LaneScheduler:
         if not self._tel:
             raise ValueError("scheduler built with record='none'")
         lane = self.lane_of(session_id)
-        values, zeroed = tel.flush_carry(self.net.static,
-                                         _read_lane(self._tel, lane))
-        self._tel = _write_lane(self._tel, lane, zeroed)
-        values["n_ticks"] = self._ticks_since_flush[lane]
-        self._ticks_since_flush[lane] = 0
+        with obs.span("flush", rung=self._obs_rung, session=session_id):
+            values, zeroed = tel.flush_carry(self.net.static,
+                                             _read_lane(self._tel, lane))
+            self._tel = _write_lane(self._tel, lane, zeroed)
+            values["n_ticks"] = self._ticks_since_flush[lane]
+            self._ticks_since_flush[lane] = 0
+        obs.inc("repro_serve_flushes_total", rung=self._obs_rung)
         return values
 
     def flush_all(self) -> dict[str, dict]:

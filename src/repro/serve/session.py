@@ -33,8 +33,10 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.engine import Engine
 from repro.core.network import CompiledNetwork, NetState
+from repro.obs.metrics import us_per_tick
 from repro.telemetry import monitors as tel
 
 __all__ = ["Session", "SessionMonitors"]
@@ -87,9 +89,11 @@ class SessionMonitors:
         """
         if self.carry is None:
             raise RuntimeError("flush() before any chunk has run")
-        values, self.carry = tel.flush_carry(self.static, self.carry)
-        values["n_ticks"] = self.ticks_since_flush
-        self.ticks_since_flush = 0
+        with obs.span("flush", scope="session"):
+            values, self.carry = tel.flush_carry(self.static, self.carry)
+            values["n_ticks"] = self.ticks_since_flush
+            self.ticks_since_flush = 0
+        obs.inc("repro_serve_flushes_total", rung="solo")
         return values
 
 
@@ -166,9 +170,17 @@ class Session:
                     "network) cannot record='monitors'")
             kw["tel_carry"] = self.monitors.chunk_carry(n_ticks)
             kw["return_tel_carry"] = True
-        self.state, out = self.engine.run(
-            n_ticks, state=self.state, record=record,
-            gen_base=self.gen_key, **kw)
+        with obs.span("step_chunk", scope="session", n_ticks=n_ticks,
+                      record=record) as sp:
+            self.state, out = self.engine.run(
+                n_ticks, state=self.state, record=record,
+                gen_base=self.gen_key, **kw)
+        if sp is not None:
+            obs.observe("repro_serve_chunk_latency_ms", sp.dur_s * 1e3,
+                        scope="session", rung="solo")
+            obs.observe("repro_serve_us_per_tick",
+                        us_per_tick(sp.dur_s, n_ticks),
+                        scope="session", rung="solo")
         if want_mon:
             self.monitors.absorb(out.pop("tel_carry"), n_ticks)
         self.ticks += n_ticks

@@ -114,8 +114,10 @@ def _merge_payload(out_path: str, payload: dict) -> dict:
         return payload
 
     def key(r):
-        return (r["net"], r["propagation"], r["backend"], r["batch"],
-                r.get("record", "raster"))
+        # Tolerate partial/foreign rows in a pre-existing file (a fresh or
+        # hand-edited BENCH_engine.json) instead of KeyError-ing the merge.
+        return (r.get("net"), r.get("propagation"), r.get("backend"),
+                r.get("batch"), r.get("record", "raster"))
 
     merged = {key(r): r for r in old.get("results", []) if "net" in r}
     for r in payload["results"]:
@@ -329,9 +331,17 @@ def bench_engine(n_ticks: int = 1000, reps: int = 3, x10_ticks: int = 200,
         })
 
     def cell(net, path, batch, record="raster", backend="xla"):
-        return next(r for r in results
-                    if (r["net"], r["propagation"], r["backend"], r["batch"],
-                        r["record"]) == (net, path, backend, batch, record))
+        want = (net, path, backend, batch, record)
+        for r in results:
+            if (r["net"], r["propagation"], r["backend"], r["batch"],
+                    r["record"]) == want:
+                return r
+        raise LookupError(
+            f"bench gate needs the baseline cell (net={net}, "
+            f"propagation={path}, backend={backend}, batch={batch}, "
+            f"record={record}) but this invocation did not measure it — "
+            "run the full bench_engine sweep (no cell subset) so the "
+            "gate's reference exists before comparing")
 
     speedup = {}
     for cfg in (SYNFIRE4, SYNFIRE4_MINI):

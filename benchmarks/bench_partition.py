@@ -1,0 +1,203 @@
+"""Partitioned-engine benchmark — the cost of the core grid.
+
+Two questions, one bench:
+
+* **Overhead on a net that doesn't need cutting**: Synfire4 (1,200
+  neurons) cut into 2 cores under the sequential lowering vs the
+  unpartitioned engine, same fp16/sparse cell as ``bench_engine``. The
+  partitioned tick does strictly more bookkeeping (per-core phase loop,
+  spike concat, import gathers), so the interesting number is how little
+  that costs. ``check_gate`` (set by ``benchmarks/run.py --smoke``)
+  asserts sequential-partitioned ≤ 1.15× the unpartitioned µs/tick, with
+  the suite's retry-after-cool-down + recompile policy: the shared
+  container's load episodes and the XLA-CPU executable-layout lottery can
+  each fake a 10% regression, so a failing measurement re-rolls the
+  executables before declaring one; a real regression fails every
+  attempt. The raster parity assert is unconditional — a bench run that
+  diverges bitwise fails regardless of timing.
+* **Throughput at the unlock scale**: ``synfire4_x100_partitioned``
+  (120,000 neurons / ~9M synapses — ~35× over one MCU budget) packed
+  under the paper's 8.477 MB per-core ceiling, timed through the same
+  harness and recorded with its per-core bytes and the exchange plan's
+  bytes/tick. Full runs only (the ×100 CSR build takes ~30 s; smoke
+  skips it via ``include_x100=False``).
+
+Rows merge into ``BENCH_engine.json`` through the same keyed
+``_merge_payload`` as the engine sweep — partitioned cells use their own
+net names (``synfire4_partitioned``, ``synfire4_x100_partitioned``) so
+they never clobber the unpartitioned history they sit next to.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.synfire4 import (  # noqa: E402
+    SYNFIRE4,
+    build_synfire,
+    scale_synfire,
+)
+from repro.core import Engine  # noqa: E402
+from repro.core.partition import PartitionSpec  # noqa: E402
+from repro.memory import MCU_BUDGET_BYTES  # noqa: E402
+
+from benchmarks.bench_engine import _merge_payload  # noqa: E402
+from benchmarks.timing import (  # noqa: E402
+    time_cells as _time_cells,
+    us_per_tick as _us_per_tick,
+)
+
+_REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+
+def _engines():
+    base = Engine(build_synfire(SYNFIRE4, policy="fp16",
+                                propagation="sparse"))
+    part = Engine(build_synfire(SYNFIRE4, policy="fp16",
+                                propagation="sparse",
+                                partition=PartitionSpec(n_cores=2)))
+    return base, part
+
+
+def _pair_ratio(n_ticks: int, reps: int):
+    """(ratio, base_us, part_us, partitioned engine) — one measurement of
+    sequential-partitioned vs unpartitioned µs/tick, parity asserted."""
+    base, part = _engines()
+    r0 = np.asarray(base.run(n_ticks)[1]["spikes"])
+    r1 = np.asarray(part.run(n_ticks)[1]["spikes"])
+    assert np.array_equal(r0, r1), (
+        "partitioned raster diverged from the unpartitioned engine — "
+        "bitwise parity is the partitioner's contract, timing is moot")
+    cells = [
+        ("synfire4", "sparse", "xla", 1, "raster",
+         base.net.n_neurons, n_ticks,
+         lambda k, e=base: e.run(k)[1]["spikes"]),
+        ("synfire4_partitioned", "sparse", "xla", 1, "raster",
+         part.net.n_neurons, n_ticks,
+         lambda k, e=part: e.run(k)[1]["spikes"]),
+    ]
+    walls = _time_cells(cells, reps)
+    base_us = _us_per_tick(walls[0][0], n_ticks)
+    part_us = _us_per_tick(walls[1][0], n_ticks)
+    return part_us / base_us, base_us, part_us, part, walls[1]
+
+
+def bench_partition(n_ticks: int = 400, reps: int = 3,
+                    x100_ticks: int = 50, write_json: bool = True,
+                    check_gate: bool = False, include_x100: bool = True):
+    ratio, base_us, part_us, part, part_wall = _pair_ratio(n_ticks, reps)
+    if check_gate:
+        for _ in range(2):
+            if ratio <= 1.15:
+                break
+            time.sleep(20)
+            jax.clear_caches()
+            r2, b2, p2, part, part_wall = _pair_ratio(n_ticks,
+                                                      max(reps, 2))
+            if r2 < ratio:
+                ratio, base_us, part_us = r2, b2, p2
+        assert ratio <= 1.15, (
+            f"sequential-partitioned tick {ratio:.2f}× the unpartitioned "
+            "baseline (gate 1.15×) across recompiles — the per-core loop "
+            "is costing more than bookkeeping")
+
+    plan = part.net.partition
+    results = [{
+        "net": "synfire4_partitioned",
+        "n_neurons": part.net.n_neurons,
+        "propagation": "sparse",
+        "backend": "xla",
+        "batch": 1,
+        "record": "raster",
+        "ticks": n_ticks,
+        "reps": reps,
+        "wall_s": round(part_wall[0], 4),
+        "wall_s_median": round(part_wall[1], 4),
+        "us_per_tick": round(part_us, 2),
+        "us_per_tick_median": round(_us_per_tick(part_wall[1],
+                                                 n_ticks), 2),
+        "ticks_per_sec": round(n_ticks / part_wall[0], 1),
+        "n_cores": plan.n_cores,
+        "core_bytes": [c.bytes_total for c in plan.cores],
+        "exchange_bytes_per_tick": plan.exchange.bytes_per_tick,
+        "vs_unpartitioned": round(ratio, 3),
+    }]
+    derived = {
+        "partitioned_vs_unpartitioned": round(ratio, 3),
+        "synfire4_us_per_tick": round(base_us, 2),
+        "synfire4_partitioned_us_per_tick": round(part_us, 2),
+    }
+
+    if include_x100:
+        cfg = scale_synfire(SYNFIRE4, 100)
+        net = build_synfire(cfg, policy="fp16", propagation="sparse",
+                            monitors=None, monitor_ms_hint=0,
+                            partition=PartitionSpec())
+        plan = net.partition
+        core_bytes = [c.bytes_total for c in plan.cores]
+        assert max(core_bytes) <= MCU_BUDGET_BYTES, (
+            "a ×100 core exceeds the paper's per-core budget — the "
+            "partitioner's ledger verify should have caught this")
+        eng = Engine(net)
+        cells = [("synfire4_x100_partitioned", "sparse", "xla", 1,
+                  "raster", net.n_neurons, x100_ticks,
+                  lambda k, e=eng: e.run(k)[1]["spikes"])]
+        # one rep: the compiled ×100 program holds ~10 cores of CSR
+        # tables; reps add minutes for a cell whose story is bytes, not
+        # a best-of race
+        (wall, wall_med), = _time_cells(cells, 1)
+        us = _us_per_tick(wall, x100_ticks)
+        results.append({
+            "net": "synfire4_x100_partitioned",
+            "n_neurons": net.n_neurons,
+            "propagation": "sparse",
+            "backend": "xla",
+            "batch": 1,
+            "record": "raster",
+            "ticks": x100_ticks,
+            "reps": 1,
+            "wall_s": round(wall, 4),
+            "wall_s_median": round(wall_med, 4),
+            "us_per_tick": round(us, 2),
+            "us_per_tick_median": round(_us_per_tick(wall_med,
+                                                     x100_ticks), 2),
+            "ticks_per_sec": round(x100_ticks / wall, 1),
+            "n_cores": plan.n_cores,
+            "core_bytes": core_bytes,
+            "max_core_mb": round(max(core_bytes) / 1024**2, 3),
+            "exchange_bytes_per_tick": plan.exchange.bytes_per_tick,
+            "exchange_edges": len(plan.exchange.edges),
+        })
+        derived.update({
+            "x100_cores": plan.n_cores,
+            "x100_us_per_tick": round(us, 2),
+            "x100_max_core_mb": round(max(core_bytes) / 1024**2, 3),
+            "x100_exchange_bytes_per_tick": plan.exchange.bytes_per_tick,
+        })
+
+    if write_json:
+        out_path = os.path.join(_REPO_ROOT, "BENCH_engine.json")
+        payload = _merge_payload(out_path, {"results": results})
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=1)
+
+    return results, derived
+
+
+def main() -> None:
+    rows, derived = bench_partition()
+    print(json.dumps(derived, indent=1))
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

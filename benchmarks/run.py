@@ -38,6 +38,7 @@ def _run(name, fn):
 
 def main(argv: list[str] | None = None) -> None:
     from benchmarks.bench_engine import bench_engine
+    from benchmarks.bench_partition import bench_partition
     from benchmarks.bench_serve import bench_obs, bench_pool, bench_serve
     from benchmarks.report import paper_report
 
@@ -87,12 +88,21 @@ def main(argv: list[str] | None = None) -> None:
             # like every other timing gate
             return bench_obs(chunk_ticks=50, reps=3, write_json=False,
                              check_gate=True)
+
+        def partition_fn():
+            # core-grid smoke: Synfire4 in 2 sequential cores must stay
+            # within 1.15x of the unpartitioned µs/tick (with bitwise
+            # raster parity asserted unconditionally); the ×100 cell is
+            # full-run-only — its 30 s CSR build has no place in smoke
+            return bench_partition(n_ticks=60, reps=1, write_json=False,
+                                   check_gate=True, include_x100=False)
     else:
         engine_fn = bench_engine
         report_fn = paper_report
         serve_fn = bench_serve
         pool_fn = bench_pool
         obs_fn = bench_obs
+        partition_fn = bench_partition
 
     results = {}
     for name, fn in [
@@ -105,6 +115,7 @@ def main(argv: list[str] | None = None) -> None:
         ("bench_serve", serve_fn),  # serve_* cells, same JSON merge
         ("bench_pool", pool_fn),  # elastic-pool cells (rungs, latencies)
         ("bench_obs", obs_fn),  # obs on/off overhead (<2% gate in smoke)
+        ("bench_partition", partition_fn),  # core-grid cells + 1.15x gate
         ("paper_report", report_fn),  # accuracy / real-time / energy metrics
     ]:
         results[name] = _run(name, fn)

@@ -112,6 +112,7 @@ def build_synfire(
     stdp_chain: STDPConfig | None = None,
     homeo_chain: HomeostasisConfig | None = None,
     homeostasis_period: int = 0,
+    partition=None,
 ) -> CompiledNetwork:
     """Build the Synfire benchmark under a precision policy.
 
@@ -168,10 +169,16 @@ def build_synfire(
     net.connect(f"Cexc{last}", "Cinh0", fanin=cfg.fanin_exc,
                 weight=cfg.w_inh_drive, delay_ms=cfg.delay_ff, mode=cfg.connect_mode)
 
+    # Partitioned builds enforce the paper's ceiling *per core* via the
+    # plan's child ledgers; keeping the default global budget too would
+    # reject exactly the over-one-device networks partitioning exists for.
+    if partition is not None and budget == MCU_BUDGET_BYTES:
+        budget = None
     ledger = MemoryLedger(budget=budget, name=f"{cfg.name}/{policy}")
     return net.compile(policy=policy, ledger=ledger,
                        monitor_ms_hint=monitor_ms_hint, monitors=monitors,
                        method=method,
                        backend=backend, propagation=propagation,
                        pallas_interpret=pallas_interpret,
-                       homeostasis_period=homeostasis_period)
+                       homeostasis_period=homeostasis_period,
+                       partition=partition)

@@ -241,16 +241,25 @@ def update_neurons_dispatch(static, params, neurons, i_syn):
     return nrn.NeuronState(v=v, u=u, refrac=refrac), spiked
 
 
-def propagate_packed(static, params, state, spikes, ring, t, packed):
+def propagate_packed(static, params, state, spikes, ring, t, packed,
+                     pre_row=None):
     """Fused propagation: bucket matmuls / CSR gathers + per-projection
     fallbacks for plastic/STP projections, merged into one ring commit per
     distinct delay.
+
+    ``pre_row`` substitutes a different bool row for every PRE-side read
+    (bucket slices, plastic/STP gathers, event-gating predicates) while the
+    accumulator/ring stay sized by ``static.n``. Partitioned cores pass
+    their imported-spike row here: a core's static tables hold pre
+    coordinates in the core's import space but post coordinates in its
+    local space, and nothing on the post side ever indexes the spike row.
 
     Returns ``(ring', new_stp)`` with ``new_stp`` aligned to
     ``static.projections``.
     """
     f32 = jnp.float32
-    spikes_f32 = spikes.astype(f32)
+    src = spikes if pre_row is None else pre_row
+    spikes_f32 = src.astype(f32)
     coba = static.ring_channels == 2
 
     # Dense [N, C] f32 accumulator per distinct delay; contributions land in
@@ -317,11 +326,11 @@ def propagate_packed(static, params, state, spikes, ring, t, packed):
         fn = (lambda pre_sp=pre_sp, w=w, j=j, spec=spec:
               plastic_drive(static, params, j, spec, w, pre_sp))
         emit(fn,
-             spikes[spec.pre_slice].any() if static.event_gated else None,
+             src[spec.pre_slice].any() if static.event_gated else None,
              spec.delay_ms, channel, spec.post_start, None)
         if stp_state is not None:
             new_stp.append(stp_update(spec.stp, stp_state,
-                                      spikes[spec.pre_slice], static.dt))
+                                      src[spec.pre_slice], static.dt))
         else:
             new_stp.append(None)
 

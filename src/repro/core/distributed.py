@@ -38,7 +38,8 @@ except ImportError:  # jax 0.4.x keeps it in experimental (check_rep kwarg)
 from repro.core import neurons as nrn
 from repro.core.network import CompiledNetwork
 
-__all__ = ["ShardedSNN", "build_sharded", "sharded_from_network", "lane_mesh"]
+__all__ = ["ShardedSNN", "build_sharded", "sharded_from_network", "lane_mesh",
+           "core_mesh"]
 
 
 def lane_mesh(n: int | None = None, *, axis: str = "lanes") -> Mesh:
@@ -59,6 +60,14 @@ def lane_mesh(n: int | None = None, *, axis: str = "lanes") -> Mesh:
             "set XLA_FLAGS=--xla_force_host_platform_device_count before "
             "jax import to fake more on CPU")
     return Mesh(np.array(devices[:n]), (axis,))
+
+
+def core_mesh(n: int | None = None, *, axis: str = "cores") -> Mesh:
+    """A 1-D device mesh for core-grid partitioning
+    (``run_partitioned_mesh``): one device per partition core, spike
+    exchange via a per-tick ``all_gather`` over ``axis``. Same device
+    semantics as :func:`lane_mesh`."""
+    return lane_mesh(n, axis=axis)
 
 
 class ShardedParams(NamedTuple):

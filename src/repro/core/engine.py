@@ -711,6 +711,8 @@ class Engine:
 
     def run(self, n_steps: int, state: NetState | None = None, **kw):
         state = state if state is not None else self.net.state0
+        if self.net.partition is not None:
+            return self._run_partitioned(n_steps, state, **kw)
         if not obs.enabled():
             return run(self.net.static, self.net.params, state, n_steps,
                        **kw)
@@ -727,9 +729,47 @@ class Engine:
         obs.inc("repro_engine_ticks_total", float(n_steps))
         return out
 
+    def _run_partitioned(self, n_steps: int, state: NetState,
+                         record: str = "raster", **kw):
+        """Route a partitioned network through its compiled lowering.
+
+        The per-core programs support the raster/none record modes only
+        (in-scan monitors are per-program state in v1); any other engine
+        kwarg is a feature the partitioned path does not express yet, so
+        reject loudly rather than silently diverge from ``run``."""
+        from repro.core import partition as part
+
+        if kw:
+            raise part.PartitionError(
+                "partitioned runs accept record='raster'/'none' only — "
+                f"unsupported kwargs: {sorted(kw)}")
+        plan = self.net.partition
+        fn = (part.run_partitioned if plan.spec.lowering == "sequential"
+              else part.run_partitioned_mesh)
+        if not obs.enabled():
+            return fn(self.net.static, plan, plan.run_params, state,
+                      n_steps, record)
+        with obs.span("partition_run", lowering=plan.spec.lowering,
+                      n_cores=plan.n_cores, n_ticks=n_steps,
+                      record=str(record)):
+            out = fn(self.net.static, plan, plan.run_params, state,
+                     n_steps, record)
+        obs.inc("repro_partition_ticks_total", float(n_steps))
+        obs.inc("repro_partition_exchange_bytes_total",
+                float(plan.exchange.bytes_per_tick) * n_steps)
+        obs.inc("repro_engine_ticks_total", float(n_steps))
+        return out
+
     def run_batch(self, n_steps: int, batch: int,
                   state: NetState | None = None, **kw):
         """B independent trials in one device program; see :func:`run_batch`."""
+        if self.net.partition is not None:
+            from repro.core.partition import PartitionError
+
+            raise PartitionError(
+                "run_batch is not supported on a partitioned network — "
+                "vmap over cores would replicate every core's tables per "
+                "trial; run trials through a ServePool instead")
         state = state if state is not None else self.net.state0
         if not obs.enabled():
             return run_batch(self.net.static, self.net.params, state,

@@ -42,6 +42,7 @@ from repro.core.synapses import (
     STPConfig,
     STPState,
     build_bernoulli,
+    build_csr_direct,
     build_fixed_fanin,
     csr_layout,
     dense_to_csr,
@@ -417,6 +418,7 @@ class NetworkBuilder:
         pallas_interpret: bool | None = None,
         pack_density: float = 0.5,
         homeostasis_period: int = 0,
+        partition=None,
     ) -> "CompiledNetwork":
         if backend not in ("xla", "pallas", "fused"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -491,19 +493,37 @@ class NetworkBuilder:
                 receptor=receptor, plastic=c.plastic, stp=c.stp,
             )
             specs.append(spec)
-            builder = build_fixed_fanin if c.mode == "fanin" else build_bernoulli
-            projs.append(builder(rng, spec, c.fanin, c.weight, storage_dtype=wdt))
+            if gpre.size * gpost.size > _DENSE_BUILD_CELLS:
+                # Too big to materialize the dense [pre, post] mask on the
+                # host (a Synfire4×100 layer is 4e8 cells) — sample the
+                # fan-in rows directly. Bitwise-different draws from the
+                # dense builders, so the threshold keeps every network the
+                # baselines cover on the dense path.
+                projs.append(build_csr_direct(
+                    rng, spec, c.fanin, c.weight,
+                    mode=("fanin" if c.mode == "fanin" else "prob"),
+                    storage_dtype=wdt))
+            else:
+                builder = build_fixed_fanin if c.mode == "fanin" else build_bernoulli
+                projs.append(builder(rng, spec, c.fanin, c.weight, storage_dtype=wdt))
             if c.stdp is not None and c.da_modulated and c.stdp.tau_elig is None:
                 c = dataclasses.replace(c, stdp=dataclasses.replace(c.stdp, tau_elig=100.0))
             stdp_cfgs.append(c.stdp)
             homeo_cfgs.append(c.homeostasis)
         for j, p in enumerate(projs):
-            m = np.asarray(p.mask)
-            specs[j] = dataclasses.replace(
-                specs[j],
-                fanin=int(m.sum(axis=0).max(initial=0)),
-                n_syn=int(m.sum()),
-            )
+            if isinstance(p, CSRFanin):
+                specs[j] = dataclasses.replace(
+                    specs[j],
+                    fanin=int(p.valid.shape[1]),
+                    n_syn=int(p.valid.sum()),
+                )
+            else:
+                m = np.asarray(p.mask)
+                specs[j] = dataclasses.replace(
+                    specs[j],
+                    fanin=int(m.sum(axis=0).max(initial=0)),
+                    n_syn=int(m.sum()),
+                )
         channels = 2 if conductances is not None else 1
         buckets, pre_ids, post_ids = _plan_buckets(
             tuple(specs), channels, pack_density, propagation
@@ -529,9 +549,18 @@ class NetworkBuilder:
         csr_set = frozenset(
             m[0] for b in buckets if b.kind == "sparse" for m in b.members
         ) | frozenset(plastic_csr) | frozenset(stp_csr)
+        for j, p in enumerate(projs):
+            if isinstance(p, CSRFanin) and j not in csr_set:
+                raise ValueError(
+                    f"{specs[j].name}: {specs[j].pre_size}×"
+                    f"{specs[j].post_size} is past the dense build "
+                    "threshold and was sampled straight into CSR rows, but "
+                    f"propagation={propagation!r} assigned it dense "
+                    "storage — compile with propagation='sparse' or 'auto'")
         csr: dict[int, CSRFanin] = {
-            j: dense_to_csr(projs[j].mask, projs[j].weight,
-                            fanin=specs[j].fanin, storage_dtype=wdt)
+            j: (projs[j] if isinstance(projs[j], CSRFanin)
+                else dense_to_csr(projs[j].mask, projs[j].weight,
+                                  fanin=specs[j].fanin, storage_dtype=wdt))
             for j in sorted(csr_set)
         }
         bucket_csr_idx = tuple(
@@ -702,8 +731,13 @@ class NetworkBuilder:
             stp=tuple(stp_states), stdp=tuple(stdp_states), cond=cond,
             homeo=tuple(homeo_states),
         )
-        return CompiledNetwork(static=static, params=params, state0=state0,
-                               ledger=ledger, policy=policy)
+        net = CompiledNetwork(static=static, params=params, state0=state0,
+                              ledger=ledger, policy=policy)
+        if partition is not None:
+            from repro.core.partition import plan_partition
+
+            net.partition = plan_partition(net, partition)
+        return net
 
 
 # How many × fewer bytes the CSR layout must touch per tick before a
@@ -715,6 +749,14 @@ class NetworkBuilder:
 # hoisted 4-byte f32 weight). At paper fan-ins (tens) this flips to sparse
 # once pre grows to a few hundred — exactly the fanin ≪ n_pre regime.
 _SPARSE_ADVANTAGE = 4.0
+
+# Above this many pre×post cells a projection skips the dense host-side
+# mask build and samples CSR fan-in rows directly (`build_csr_direct`).
+# 2^25 ≈ 33.5M cells keeps every baseline network (Synfire4×10's biggest
+# layer is 4M cells) bit-for-bit on the dense builders while letting
+# Synfire4×100-scale layers (4e8 cells ≈ 11+ GB dense scratch) build at
+# all.
+_DENSE_BUILD_CELLS = 1 << 25
 
 
 def _csr_wins(spec: ProjectionSpec) -> bool:
@@ -867,6 +909,9 @@ class CompiledNetwork:
     state0: NetState
     ledger: MemoryLedger
     policy: PrecisionPolicy
+    # Set by compile(partition=PartitionSpec(...)): the core-grid plan the
+    # Engine routes through (repro.core.partition).
+    partition: object | None = None
 
     @property
     def n_neurons(self) -> int:

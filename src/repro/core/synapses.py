@@ -27,6 +27,7 @@ __all__ = [
     "ProjectionParams",
     "STPConfig",
     "STPState",
+    "build_csr_direct",
     "build_fixed_fanin",
     "csr_layout",
     "csr_to_dense",
@@ -173,6 +174,73 @@ class CSRFanin(NamedTuple):
     idx: jax.Array  # [post, fanin] int16/int32
     weight: jax.Array  # [post, fanin] storage dtype
     valid: jax.Array | np.ndarray  # [post, fanin] bool — False on padding
+
+
+def build_csr_direct(
+    rng: np.random.Generator,
+    spec: ProjectionSpec,
+    fanin: int,
+    weight: float,
+    *,
+    mode: str = "prob",
+    storage_dtype=jnp.float32,
+    chunk: int = 2048,
+) -> CSRFanin:
+    """Build a constant-weight random projection straight into CSR fan-in
+    rows, never materializing the dense ``[pre, post]`` mask.
+
+    The dense builders allocate pre×post cells per projection, which caps
+    network construction near Synfire4×10 (a ×100 scale-up would need
+    ~10 GB of host scratch). This path samples each post neuron's distinct
+    pre sources directly: ``mode="prob"`` draws binomial(n_pre, fanin/n_pre)
+    row counts (matching :func:`build_bernoulli`'s per-pair Bernoulli
+    semantics), ``mode="fanin"`` uses exactly ``fanin`` per row (matching
+    :func:`build_fixed_fanin`). Rows follow the :func:`csr_layout`
+    contract — ascending pre index over a valid prefix, index 0 / weight 0
+    padding — so every CSR consumer treats the output identically to a
+    dense-then-converted build. Same seed → same network, but the draws
+    differ from the dense builders' (documented, like the PR 1
+    vectorization seed change); ``network.compile`` only routes
+    projections here above its dense-cells threshold, so every existing
+    config's connectivity is untouched.
+    """
+    n_pre, n_post = spec.pre_size, spec.post_size
+    if fanin > n_pre:
+        raise ValueError(f"{spec.name}: fanin {fanin} > pre group size {n_pre}")
+    if mode == "prob":
+        counts = rng.binomial(n_pre, fanin / n_pre, size=n_post)
+        counts = np.minimum(counts, n_pre).astype(np.int64)
+    elif mode == "fanin":
+        counts = np.full(n_post, fanin, dtype=np.int64)
+    else:
+        raise ValueError(f"unknown connect mode {mode!r}")
+    f = max(int(counts.max()), 1)
+    idx = np.zeros((n_post, f), dtype=np.int64)
+    valid = np.arange(f)[None, :] < counts[:, None]  # [post, f] prefix
+    for q0 in range(0, n_post, chunk):
+        q1 = min(q0 + chunk, n_post)
+        r = rng.random((q1 - q0, n_pre), dtype=np.float32)
+        if f < n_pre:
+            # f smallest uniforms per row (unordered), then order them by
+            # value: the first counts[q] are the counts[q] smallest of the
+            # whole row — a uniform without-replacement sample, exactly as
+            # the dense builders' argsort-prefix draws.
+            cand = np.argpartition(r, f, axis=1)[:, :f]
+            sub = np.take_along_axis(r, cand, axis=1)
+            cand = np.take_along_axis(cand, np.argsort(sub, axis=1), axis=1)
+        else:  # f == n_pre: full permutation keeps partial rows uniform
+            cand = np.argsort(r, axis=1)
+        # ascending pre index over the valid prefix, 0 on padding
+        cand = np.where(valid[q0:q1], cand, np.int64(n_pre))
+        cand.sort(axis=1)
+        idx[q0:q1] = np.where(valid[q0:q1], cand, 0)
+    wq = np.where(valid, np.float32(weight), np.float32(0.0))
+    idx_dtype = np.int16 if n_pre <= np.iinfo(np.int16).max else np.int32
+    return CSRFanin(
+        idx=jnp.asarray(idx.astype(idx_dtype)),
+        weight=jnp.asarray(wq, storage_dtype),
+        valid=valid,
+    )
 
 
 def csr_layout(

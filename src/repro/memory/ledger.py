@@ -69,6 +69,15 @@ class MemoryLedger:
         self._entries: list[_Entry] = []
         self._current_stage: str | None = None
 
+    def child(self, suffix: str, budget: int | None = None) -> "MemoryLedger":
+        """A derived ledger named ``<self.name>/<suffix>`` with its own
+        budget (default: inherit) — one per partition core, so the paper's
+        8.477 MB ceiling is enforced per core rather than globally."""
+        return MemoryLedger(
+            budget=self.budget if budget is None else budget,
+            name=f"{self.name}/{suffix}",
+        )
+
     # -- registration ---------------------------------------------------------
     @contextmanager
     def stage(self, stage: str) -> Iterator[None]:

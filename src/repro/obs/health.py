@@ -40,6 +40,7 @@ __all__ = [
     "PASS", "WARN", "FAIL",
     "HealthCheck",
     "budget_check",
+    "core_checks",
     "health_snapshot",
     "measured_serve_check",
     "realtime_check",
@@ -107,6 +108,21 @@ def rung_checks(rung_bytes: dict[str, float], *,
             for rung, nbytes in sorted(rung_bytes.items())]
 
 
+def core_checks(core_bytes: dict[str, float], *,
+                ceiling: int = MCU_BUDGET_BYTES,
+                warn_frac: float = 0.9) -> list[HealthCheck]:
+    """One budget check per partition core against the per-core MCU
+    ceiling — the paper's 8.477 MB enforced on every core of a
+    ``compile(partition=...)`` plan, same discipline as the serving
+    rungs."""
+    def key(c):
+        return (len(c), c)  # "2" < "10" numerically
+
+    return [budget_check(int(core_bytes[c]), budget=ceiling,
+                         warn_frac=warn_frac, name=f"core_bytes[{c}]")
+            for c in sorted(core_bytes, key=key)]
+
+
 def measured_serve_check(registry, *, dt_ms: float = 1.0,
                          quantile: float = 0.95) -> HealthCheck | None:
     """p-quantile of live serve µs/tick vs the real-time bar, merged
@@ -132,6 +148,14 @@ def _rungs_from_registry(registry) -> dict[str, float]:
     if g is None or g.kind != "gauge":
         return {}
     return {dict(key).get("rung", "unkeyed"): value
+            for key, value in g.series().items()}
+
+
+def _cores_from_registry(registry) -> dict[str, float]:
+    g = registry.get("repro_partition_core_bytes")
+    if g is None or g.kind != "gauge":
+        return {}
+    return {dict(key).get("core", "?"): value
             for key, value in g.series().items()}
 
 
@@ -161,14 +185,31 @@ def health_snapshot(net=None, *, hw: HardwareSpec = M33,
             hw=hw, mean_rate_hz=mean_rate_hz, dt_ms=dt_ms,
             bytes_per_weight=2 if "16" in policy_name else 4))
         ledger = ledger if ledger is not None else net.ledger
+    plan = getattr(net, "partition", None)
     if ledger is not None:
+        # A partitioned, unbudgeted ledger answers to the fleet capacity
+        # (cores × per-core ceiling), not one MCU — the per-core checks
+        # below enforce the single-device story.
+        fallback = mcu_ceiling
+        if plan is not None:
+            fallback = (plan.spec.core_budget_bytes or mcu_ceiling) \
+                * plan.n_cores
         checks.append(budget_check(
             ledger.total_used,
-            budget=ledger.budget if ledger.budget else mcu_ceiling))
+            budget=ledger.budget if ledger.budget else fallback))
         checks.extend(rung_checks(ledger.serve_rung_bytes(),
                                   ceiling=mcu_ceiling))
     else:
         checks.extend(rung_checks(_rungs_from_registry(registry),
+                                  ceiling=mcu_ceiling))
+
+    if plan is not None:
+        per_core = plan.spec.core_budget_bytes or mcu_ceiling
+        checks.extend(core_checks(
+            {str(c): float(b) for c, b in plan.core_bytes().items()},
+            ceiling=per_core))
+    else:
+        checks.extend(core_checks(_cores_from_registry(registry),
                                   ceiling=mcu_ceiling))
 
     measured = measured_serve_check(registry, dt_ms=dt_ms)

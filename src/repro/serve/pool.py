@@ -93,10 +93,14 @@ class CapacityLadder:
     def __init__(self, net: CompiledNetwork, *, rungs=RUNGS,
                  record: str = "monitors", mesh: Mesh | None = None,
                  mesh_axis: str = "lanes", idle_after: int = 2,
-                 ledger_prefix: str = ""):
+                 ledger_prefix: str = "", lane_chooser=None):
         if not rungs:
             raise ValueError("need at least one rung")
         self.net = net
+        # Optional admission policy hook: called with the live scheduler,
+        # returns a free lane index (or None for first-fit). The pool's
+        # best-fit policy routes through this.
+        self._lane_chooser = lane_chooser
         self.rungs = tuple(sorted(set(int(r) for r in rungs)))
         self.record = record
         self.mesh = mesh
@@ -162,7 +166,10 @@ class CapacityLadder:
               key: jax.Array | None = None,
               state: NetState | None = None) -> int:
         self._ensure_capacity(self.occupancy + 1)
-        return self._sched.admit(session_id, seed=seed, key=key, state=state)
+        lane = (self._lane_chooser(self._sched)
+                if self._lane_chooser is not None else None)
+        return self._sched.admit(session_id, seed=seed, key=key,
+                                 state=state, lane=lane)
 
     def _ensure_capacity(self, n_tenants: int) -> None:
         """First build or up-rung migration so ``n_tenants`` fit."""
@@ -226,12 +233,24 @@ class ServePool:
 
     def __init__(self, *, rungs=RUNGS, record: str = "monitors",
                  mesh: Mesh | None = None, mesh_axis: str = "lanes",
-                 idle_after: int = 2):
+                 idle_after: int = 2, policy: str = "first_fit",
+                 bin_lanes: int = 8):
+        if policy not in ("first_fit", "best_fit"):
+            raise ValueError(
+                f"unknown admission policy {policy!r} — "
+                "'first_fit' or 'best_fit'")
+        if bin_lanes < 1:
+            raise ValueError(f"bin_lanes must be >= 1, got {bin_lanes}")
         self._opts = dict(rungs=rungs, record=record, mesh=mesh,
                           mesh_axis=mesh_axis, idle_after=idle_after)
+        self.policy = policy
+        self.bin_lanes = bin_lanes
         self._ladders: dict[str, CapacityLadder] = {}
         self._nets: dict[str, CompiledNetwork] = {}
         self._routes: dict[str, str] = {}  # session id -> fingerprint
+        # session id -> most recent flush-reported activity (mean filtered
+        # group rate, Hz) — the best-fit tie-breaker.
+        self._activity: dict[str, float] = {}
 
     # -- topology table -------------------------------------------------------
     @property
@@ -271,20 +290,73 @@ class ServePool:
         fp = compile_fingerprint(net)
         ladder = self._ladders.get(fp)
         if ladder is None:
+            chooser = (self._choose_lane if self.policy == "best_fit"
+                       else None)
             ladder = CapacityLadder(net, ledger_prefix=f"{fp[:8]}.",
-                                    **self._opts)
+                                    lane_chooser=chooser, **self._opts)
             self._ladders[fp] = ladder
             self._nets[fp] = net
         return fp, ladder
 
+    # -- admission policy -----------------------------------------------------
+    def _choose_lane(self, sched) -> int | None:
+        """Best-fit bin packing over ``bin_lanes``-wide lane blocks.
+
+        Lanes group into fixed blocks (bins); a new tenant lands in the
+        *fullest* block that still has a free lane — classic best-fit, so
+        partially-used blocks close up and whole blocks stay empty for
+        bulk placement. Ties break toward the block with the lowest
+        aggregate recent tenant activity (the mean filtered group rates
+        each ``flush`` reported), spreading hot tenants apart, then toward
+        the lower block index for determinism. Falls back to first-fit
+        (None) when there is nothing to choose."""
+        lanes = sched.lane_sessions
+        if not lanes:
+            return None
+        nb = self.bin_lanes
+        best = None  # (-(occupied), activity, bin index, first free lane)
+        for b0 in range(0, len(lanes), nb):
+            block = lanes[b0:b0 + nb]
+            free = [b0 + i for i, s in enumerate(block) if s is None]
+            if not free:
+                continue
+            occupied = len(block) - len(free)
+            activity = sum(self._activity.get(s, 0.0)
+                           for s in block if s is not None)
+            cand = (-occupied, activity, b0, free[0])
+            if best is None or cand < best:
+                best = cand
+        return best[3] if best is not None else None
+
+    def _note_activity(self, session_id: str, values: dict) -> None:
+        """Record a tenant's flush-reported activity: mean of any
+        rate-valued monitor (the default GroupRate filter level), else
+        spikes/tick from count monitors."""
+        rate_keys = sorted(k for k in values if "rate" in k)
+        for k in rate_keys:
+            arr = np.asarray(values[k], dtype=np.float64)
+            if arr.size:
+                self._activity[session_id] = float(arr.mean())
+                return
+        n_ticks = max(int(values.get("n_ticks", 0)), 1)
+        for k in sorted(values):
+            if k == "n_ticks":
+                continue
+            arr = np.asarray(values[k], dtype=np.float64)
+            if arr.size:
+                self._activity[session_id] = float(arr.sum()) / n_ticks
+                return
+
     def evict(self, session_id: str) -> Evicted:
         ev = self.ladder_of(session_id).evict(session_id)
         del self._routes[session_id]
+        self._activity.pop(session_id, None)
         return ev
 
     def export(self, session_id: str) -> LaneSnapshot:
         snap = self.ladder_of(session_id).export(session_id)
         del self._routes[session_id]
+        self._activity.pop(session_id, None)
         return snap
 
     def restore(self, net: CompiledNetwork, snap: LaneSnapshot) -> str:
@@ -301,7 +373,9 @@ class ServePool:
         return fp
 
     def flush(self, session_id: str) -> dict:
-        return self.ladder_of(session_id).flush(session_id)
+        values = self.ladder_of(session_id).flush(session_id)
+        self._note_activity(session_id, values)
+        return values
 
     def step(self, n_ticks: int) -> None:
         """One chunk for every ladder (each a single device program)."""

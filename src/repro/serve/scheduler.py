@@ -232,6 +232,13 @@ class LaneScheduler:
         return [i for i, s in enumerate(self._lanes) if s is None]
 
     @property
+    def lane_sessions(self) -> list[str | None]:
+        """Per-lane occupancy view (session id or None), for admission
+        policies that place by lane geometry."""
+        return [s.session_id if s is not None else None
+                for s in self._lanes]
+
+    @property
     def session_bytes(self) -> int:
         """Device bytes one admitted session costs: its lane's replicated
         NetState slice plus its telemetry accumulators."""
@@ -246,7 +253,8 @@ class LaneScheduler:
     # -- admit / evict --------------------------------------------------------
     def admit(self, session_id: str, *, seed: int | None = None,
               key: jax.Array | None = None,
-              state: NetState | None = None) -> int:
+              state: NetState | None = None,
+              lane: int | None = None) -> int:
         """Place a session into a free lane; returns the lane index.
 
         ``seed``/``key`` names the tenant's stimulus stream; when neither
@@ -254,25 +262,35 @@ class LaneScheduler:
         processes and restarts (NOT Python's salted ``hash``), so a
         re-admitted tenant keeps its stream. ``state`` resumes an existing
         session (an evicted lane, a solo ``Session.state``, or a restored
-        checkpoint) instead of the network's fresh ``state0``.
+        checkpoint) instead of the network's fresh ``state0``. ``lane``
+        pins the placement to a specific free lane (admission policies —
+        ``ServePool(policy="best_fit")``); default is first-fit.
         """
         with obs.span("admit", rung=self._obs_rung, session=session_id):
             lane = self._admit_impl(session_id, seed=seed, key=key,
-                                    state=state)
+                                    state=state, lane=lane)
         if obs.enabled():
             obs.inc("repro_serve_admits_total", rung=self._obs_rung)
             self._obs_occupancy()
         return lane
 
-    def _admit_impl(self, session_id: str, *, seed, key, state) -> int:
-        if not self.free_lanes:
+    def _admit_impl(self, session_id: str, *, seed, key, state,
+                    lane=None) -> int:
+        free = self.free_lanes
+        if not free:
             raise RuntimeError(
                 f"scheduler full ({self.capacity} lanes) — evict before "
                 "admitting")
         if any(s is not None and s.session_id == session_id
                for s in self._lanes):
             raise ValueError(f"session id {session_id!r} already admitted")
-        lane = self.free_lanes[0]
+        if lane is None:
+            lane = free[0]
+        elif lane not in free:
+            raise ValueError(
+                f"lane {lane} is not free (free lanes: {free[:8]}...)"
+                if len(free) > 8 else
+                f"lane {lane} is not free (free lanes: {free})")
         if key is None:
             key = jax.random.key(seed if seed is not None else
                                  zlib.crc32(session_id.encode()))

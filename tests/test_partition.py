@@ -1,0 +1,286 @@
+"""Compile-time partitioner (`repro.core.partition`): cut correctness,
+byte budgets, exchange plan, and — the load-bearing claim — **bitwise
+parity**: a network cut into fixed-budget cores and run through either
+lowering (sequential loop or shard_map mesh) produces the exact raster,
+weights, neuron state, ring, and RNG stream of the unpartitioned engine.
+Everything here asserts equality, never tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.synfire4 import (
+    CHAIN_STDP,
+    SYNFIRE4,
+    build_synfire,
+    scale_synfire,
+)
+from repro.core.engine import Engine
+from repro.core.partition import (
+    PartitionError,
+    PartitionSpec,
+    plan_partition,
+)
+from repro.memory.ledger import MCU_BUDGET_BYTES
+from test_distributed import run_with_devices
+
+T = 60
+
+
+def _dekey(tree):
+    return jax.tree.map(
+        lambda x: jax.random.key_data(x)
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype,
+                                                  jax.dtypes.prng_key)
+        else x, tree)
+
+
+def _assert_bitwise(s0, o0, s1, o1, what):
+    assert np.array_equal(np.asarray(o0["spikes"]),
+                          np.asarray(o1["spikes"])), f"{what}: raster"
+    fa = jax.tree.leaves(_dekey(s0))
+    fb = jax.tree.leaves(_dekey(s1))
+    assert len(fa) == len(fb)
+    for i, (x, y) in enumerate(zip(fa, fb)):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes(), \
+            f"{what}: state leaf {i} differs"
+
+
+def _parity(spec, *, T=T, **kw):
+    base = build_synfire(SYNFIRE4, **kw)
+    s0, o0 = Engine(base).run(T)
+    net = build_synfire(SYNFIRE4, partition=spec, **kw)
+    s1, o1 = Engine(net).run(T)
+    _assert_bitwise(s0, o0, s1, o1, str(kw))
+    return net
+
+
+class TestSequentialParity:
+    """Partitioned == unpartitioned, bit for bit, per propagation/backend/
+    dtype cell. (The full 6-cell matrix runs nightly; this is the fast
+    cross-section.)"""
+
+    @pytest.mark.parametrize("kw", [
+        dict(policy="fp32", propagation="packed"),
+        dict(policy="fp16", propagation="auto"),
+        dict(policy="fp32", propagation="packed", backend="fused"),
+    ], ids=["packed-xla-fp32", "auto-xla-fp16", "packed-fused-fp32"])
+    def test_two_core_parity(self, kw):
+        net = _parity(PartitionSpec(n_cores=2), **kw)
+        assert net.partition.n_cores == 2
+
+    def test_plastic_two_core_parity(self):
+        """Plastic weights evolve per-core yet reassemble to the exact
+        unpartitioned trajectory (the STDP cluster stays intact)."""
+        net = _parity(PartitionSpec(n_cores=2), policy="fp32",
+                      propagation="sparse", stdp_chain=CHAIN_STDP)
+        cuts = [(c.lo, c.hi) for c in net.partition.cores]
+        assert cuts == [(0, 1150), (1150, 1200)]
+
+    def test_one_core_identity(self):
+        net = _parity(PartitionSpec(n_cores=1), policy="fp32",
+                      propagation="sparse")
+        plan = net.partition
+        assert plan.n_cores == 1
+        assert (plan.cores[0].lo, plan.cores[0].hi) == (0, net.n_neurons)
+        assert plan.exchange.edges == ()
+        assert plan.exchange.bytes_per_tick == 0
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("kw", [
+        dict(policy="fp32", propagation="sparse"),
+        dict(policy="fp16", propagation="auto"),
+        dict(policy="fp32", propagation="packed", backend="fused"),
+        dict(policy="fp16", propagation="auto", backend="fused"),
+        dict(policy="fp32", propagation="sparse", stdp_chain=CHAIN_STDP),
+        dict(policy="fp16", propagation="packed", stdp_chain=CHAIN_STDP),
+    ], ids=["sparse-xla-fp32", "auto-xla-fp16", "packed-fused-fp32",
+            "auto-fused-fp16", "plastic-sparse-fp32",
+            "plastic-packed-fp16"])
+    def test_full_matrix(self, kw):
+        _parity(PartitionSpec(n_cores=2), T=120, **kw)
+        # plastic cells need headroom for the atomic STDP span (~0.9 MB)
+        budget = 1_000_000 if "stdp_chain" in kw else 300_000
+        _parity(PartitionSpec(core_budget_bytes=budget), T=120, **kw)
+
+
+class TestCutPlanning:
+    @pytest.fixture(scope="class")
+    def base(self):
+        return build_synfire(SYNFIRE4, policy="fp32", propagation="sparse")
+
+    def test_budget_mode_respects_ceiling(self, base):
+        """Greedy packing: every core's *verified* ledger bytes stay
+        under the requested ceiling, and the cores tile [0, N)."""
+        for budget in (320_000, 600_000, MCU_BUDGET_BYTES):
+            plan = plan_partition(base, PartitionSpec(
+                core_budget_bytes=budget))
+            edges = [(c.lo, c.hi) for c in plan.cores]
+            assert edges[0][0] == 0 and edges[-1][1] == base.n_neurons
+            assert all(a[1] == b[0] for a, b in zip(edges, edges[1:]))
+            assert all(c.bytes_total <= budget for c in plan.cores), budget
+
+    def test_budget_respect_property(self, base):
+        """Hypothesis sweep of the budget axis — cut feasibility, tiling,
+        and the per-core ceiling hold for arbitrary budgets."""
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings, strategies as st
+
+        @settings(max_examples=8, deadline=None)
+        @given(st.integers(min_value=320_000, max_value=4_000_000))
+        def prop(budget):
+            plan = plan_partition(base, PartitionSpec(
+                core_budget_bytes=budget))
+            edges = [(c.lo, c.hi) for c in plan.cores]
+            assert edges[0][0] == 0 and edges[-1][1] == base.n_neurons
+            assert all(a[1] == b[0] for a, b in zip(edges, edges[1:]))
+            assert all(c.bytes_total <= budget for c in plan.cores)
+
+        prop()
+
+    def test_plastic_cluster_is_atomic(self):
+        """No cut ever lands strictly inside the STDP chain's pre∪post
+        span [200, 1150) — at any requested core count."""
+        net = build_synfire(SYNFIRE4, policy="fp32", propagation="sparse",
+                            stdp_chain=CHAIN_STDP)
+        for k in (2, 3, 4, 5):
+            plan = plan_partition(net, PartitionSpec(n_cores=k))
+            assert plan.n_cores == k
+            internal = [c.lo for c in plan.cores[1:]]
+            assert not any(200 < cut < 1150 for cut in internal), \
+                (k, internal)
+
+    def test_exchange_plan_accounts_every_edge(self, base):
+        plan = plan_partition(base, PartitionSpec(n_cores=3))
+        assert plan.exchange.edges, "3-core synfire chain must exchange"
+        assert all(src != dst and n > 0
+                   for src, dst, n in plan.exchange.edges)
+        assert plan.exchange.bytes_per_tick == \
+            sum(n for _, _, n in plan.exchange.edges)
+        # import tables match the plan: core c's ext space holds exactly
+        # its inbound edge ids
+        inbound = {c.index: 0 for c in plan.cores}
+        for _, dst, n in plan.exchange.edges:
+            inbound[dst] += n
+        for c in plan.cores:
+            imported = int(np.sum(
+                (np.asarray(plan.ext_ids[c.index]) < c.lo)
+                | (np.asarray(plan.ext_ids[c.index]) >= c.hi)))
+            assert imported == inbound[c.index]
+
+
+class TestDegenerateSpecs:
+    @pytest.fixture(scope="class")
+    def base(self):
+        return build_synfire(SYNFIRE4, policy="fp32", propagation="sparse")
+
+    def test_no_sizing(self, base):
+        with pytest.raises(PartitionError, match="n_cores or core_budget"):
+            plan_partition(base, PartitionSpec(core_budget_bytes=None))
+
+    def test_zero_cores(self, base):
+        with pytest.raises(PartitionError, match="n_cores must be >= 1"):
+            plan_partition(base, PartitionSpec(n_cores=0))
+
+    def test_more_cores_than_groups_unsplittable(self, base):
+        with pytest.raises(PartitionError, match="split_groups=False"):
+            plan_partition(base, PartitionSpec(
+                n_cores=len(base.static.groups) + 1, split_groups=False))
+
+    def test_unknown_lowering(self, base):
+        with pytest.raises(PartitionError, match="unknown lowering"):
+            plan_partition(base, PartitionSpec(n_cores=2, lowering="tpu"))
+
+    def test_budget_below_atomic_span(self):
+        """A ceiling smaller than the STDP cluster's atomic span is a
+        typed error naming the span, not an infinite retry loop."""
+        net = build_synfire(SYNFIRE4, policy="fp32", propagation="sparse",
+                            stdp_chain=CHAIN_STDP)
+        with pytest.raises(PartitionError, match="atomic span"):
+            plan_partition(net, PartitionSpec(core_budget_bytes=100_000))
+
+    def test_loop_propagation_rejected(self):
+        with pytest.raises(PartitionError, match="loop"):
+            build_synfire(SYNFIRE4, policy="fp32", propagation="loop",
+                          partition=PartitionSpec(n_cores=2))
+
+    def test_mesh_rejects_plastic(self):
+        with pytest.raises(PartitionError, match="mesh"):
+            build_synfire(SYNFIRE4, policy="fp32", propagation="sparse",
+                          stdp_chain=CHAIN_STDP,
+                          partition=PartitionSpec(n_cores=2,
+                                                  lowering="mesh"))
+
+    def test_partitioned_run_rejects_monitors(self):
+        net = build_synfire(SYNFIRE4, policy="fp32", propagation="sparse",
+                            partition=PartitionSpec(n_cores=2))
+        with pytest.raises(PartitionError, match="record"):
+            Engine(net).run(10, record="monitors")
+
+    def test_partitioned_run_batch_rejected(self):
+        net = build_synfire(SYNFIRE4, policy="fp32", propagation="sparse",
+                            partition=PartitionSpec(n_cores=2))
+        with pytest.raises(PartitionError, match="run_batch"):
+            Engine(net).run_batch(10, 4)
+
+
+class TestMeshLowering:
+    @pytest.mark.slow
+    def test_mesh_parity_multi_device(self):
+        """shard_map lowering on 4 forced host devices == unpartitioned,
+        bit for bit (raster + neuron state + ring)."""
+        res = run_with_devices(4, """
+        import json
+        import numpy as np
+        import jax
+        from repro.configs.synfire4 import SYNFIRE4, build_synfire
+        from repro.core.engine import Engine
+        from repro.core.partition import PartitionSpec
+
+        T = 120
+        base = build_synfire(SYNFIRE4, policy="fp32", propagation="sparse")
+        s0, o0 = Engine(base).run(T)
+        net = build_synfire(SYNFIRE4, policy="fp32", propagation="sparse",
+                            partition=PartitionSpec(n_cores=4,
+                                                    lowering="mesh"))
+        s1, o1 = Engine(net).run(T)
+        ok = bool(np.array_equal(np.asarray(o0["spikes"]),
+                                 np.asarray(o1["spikes"])))
+        for a, b in zip(jax.tree.leaves(s0.neurons),
+                        jax.tree.leaves(s1.neurons)):
+            ok = ok and np.asarray(a).tobytes() == np.asarray(b).tobytes()
+        ok = ok and bool(np.array_equal(np.asarray(s0.ring),
+                                        np.asarray(s1.ring)))
+        print(json.dumps({"ok": ok,
+                          "cores": net.partition.n_cores,
+                          "spikes": int(np.asarray(o0["spikes"]).sum())}))
+        """)
+        assert res["cores"] == 4
+        assert res["ok"], "mesh lowering diverged from unpartitioned"
+
+
+class TestSynfire4x100:
+    @pytest.mark.slow
+    def test_x100_fits_per_core_budgets(self):
+        """The unlock: Synfire4×100 (120k neurons) partitions into cores
+        that each clear the paper's 8.477 MB ceiling — verified on real
+        per-core ledgers — and the partitioned engine runs it."""
+        from repro.obs.health import health_snapshot
+
+        cfg = scale_synfire(SYNFIRE4, 100)
+        net = build_synfire(cfg, policy="fp16", propagation="sparse",
+                            monitors=None, monitor_ms_hint=0,
+                            partition=PartitionSpec())
+        plan = net.partition
+        assert net.n_neurons == 120_000
+        assert plan.n_cores > 1
+        assert all(c.bytes_total <= MCU_BUDGET_BYTES for c in plan.cores)
+        assert plan.exchange.bytes_per_tick > 0
+        state, out = Engine(net).run(10)
+        assert np.asarray(out["spikes"]).shape == (10, 120_000)
+        h = health_snapshot(net)
+        core_rows = [c for c in h["checks"]
+                     if c["name"].startswith("core_bytes")]
+        assert len(core_rows) == plan.n_cores
+        assert all(c["status"] == "pass" for c in core_rows), core_rows

@@ -408,3 +408,97 @@ class TestShardedLaneParity:
         assert out.returncode == 0, out.stderr[-3000:]
         res = json.loads(out.stdout.strip().splitlines()[-1])
         assert res["ok"], "sharded lanes diverged from single-device"
+
+
+class TestAdmissionPolicy:
+    """ServePool(policy=): first-fit default vs best-fit bin packing."""
+
+    def test_bad_policy_rejected(self):
+        with pytest.raises(ValueError, match="admission policy"):
+            ServePool(policy="worst_fit")
+        with pytest.raises(ValueError, match="bin_lanes"):
+            ServePool(policy="best_fit", bin_lanes=0)
+
+    def test_pinned_lane_must_be_free(self):
+        net = _mini("fp32", "packed", "xla")
+        sched = LaneScheduler(net, 2, record="monitors")
+        assert sched.admit("a") == 0
+        with pytest.raises(ValueError, match="not free"):
+            sched.admit("b", lane=0)
+        assert sched.admit("b", lane=1) == 1
+        assert sched.lane_sessions == ["a", "b"]
+
+    def test_default_first_fit_unchanged(self):
+        """The default pool keeps the historical lane order: lowest free
+        lane, regardless of bin occupancy."""
+        net = _mini("fp32", "packed", "xla")
+        pool = ServePool(rungs=(8,))
+        for i in range(5):
+            pool.admit(net, f"t{i}")
+        pool.evict("t1")
+        pool.admit(net, "t5")  # first free lane = 1
+        sched = pool.ladder_of("t5").scheduler
+        assert sched.lane_sessions[:6] == \
+            ["t0", "t5", "t2", "t3", "t4", None]
+
+    def test_best_fit_prefers_fullest_bin(self):
+        """With bin0 nearly empty and bin1 nearly full, best-fit closes
+        up bin1 (lane 7) where first-fit would take lane 1."""
+        net = _mini("fp32", "packed", "xla")
+        pool = ServePool(rungs=(8,), policy="best_fit", bin_lanes=4)
+        for i in range(7):
+            pool.admit(net, f"t{i}")   # best-fit on empty = lanes 0..6
+        for sid in ("t1", "t2", "t3"):
+            pool.evict(sid)            # bin0 = {t0}, bin1 = {t4, t5, t6}
+        pool.admit(net, "t7")
+        sched = pool.ladder_of("t7").scheduler
+        assert sched.lane_sessions == \
+            ["t0", None, None, None, "t4", "t5", "t6", "t7"]
+
+    def test_best_fit_activity_tiebreak(self):
+        """Equal occupancy: the bin with lower aggregate flush-reported
+        activity wins, spreading hot tenants apart."""
+        net = _mini("fp32", "packed", "xla")
+        pool = ServePool(rungs=(8,), policy="best_fit", bin_lanes=4)
+        for i in range(5):
+            pool.admit(net, f"t{i}")
+        for sid in ("t1", "t2", "t3"):
+            pool.evict(sid)            # bin0 = {t0}, bin1 = {t4}
+        pool._activity.update({"t0": 40.0, "t4": 2.0})
+        pool.admit(net, "cool")        # tie on occupancy -> quieter bin1
+        sched = pool.ladder_of("cool").scheduler
+        assert sched.lane_sessions[5] == "cool"
+        pool.evict("cool")             # back to a 1-vs-1 tie
+        pool._activity.update({"t0": 2.0, "t4": 40.0})
+        pool.admit(net, "hot")         # now bin0 is the quieter bin
+        assert sched.lane_sessions[1] == "hot"
+
+    def test_flush_feeds_activity_and_evict_clears_it(self):
+        net = _mini("fp32", "packed", "xla")
+        pool = ServePool(rungs=(8,), policy="best_fit")
+        pool.admit(net, "t")
+        pool.step(50)
+        pool.flush("t")
+        assert "t" in pool._activity
+        assert np.isfinite(pool._activity["t"])
+        assert pool._activity["t"] >= 0.0
+        pool.evict("t")
+        assert "t" not in pool._activity
+
+    def test_best_fit_streams_match_solo(self):
+        """Placement policy is routing only — every tenant's numerics are
+        bit-identical to a solo session regardless of which lane it got."""
+        net = _mini("fp16", "packed", "xla", plastic=True)
+        pool = ServePool(rungs=(8,), policy="best_fit", bin_lanes=2)
+        for i in range(5):
+            pool.admit(net, f"s{i}")
+        pool.evict("s1")
+        pool.admit(net, "s5")          # lands by best-fit, not lane 1
+        pool.step(40)
+        pool.step(40)
+        for sid in ("s0", "s2", "s3", "s4", "s5"):
+            solo = Session.create(net, seed=_seed_of(sid))
+            solo.run(40)
+            solo.run(40)
+            _assert_flush_eq(pool.flush(sid), solo.flush())
+            _assert_state_eq(pool.evict(sid).state, solo.state, sid)

@@ -34,6 +34,12 @@ throughput against the raw PR 5 single-scheduler fleet.
 fleet — both arms dispatch the same compiled executable, so the gap is
 purely the host-side span/metric bookkeeping — and (in smoke) gates the
 observability plane's overhead under 2% µs/tick.
+
+:func:`bench_watch` times watch-enabled vs watch-free chunks on the same
+64-lane fleet — here the arms ARE different executables (the watch
+accumulators ride the scan carry), so the budget is the in-scan
+monitors' 5%, gated in smoke: the O(1) reductions must stay noise-level
+against the tick itself.
 """
 from __future__ import annotations
 
@@ -420,6 +426,89 @@ def bench_obs(chunk_ticks: int = 100, reps: int = 5, n_tenants: int = 64,
     return rows, {"obs_overhead_pct": round(overhead * 100, 2)}
 
 
+def _watch_overhead_once(chunk_ticks: int, reps: int,
+                         n_tenants: int) -> float:
+    """Fractional µs/tick cost of in-scan watchpoints on a warm
+    ``n_tenants``-lane fleet, best-of-``reps`` interleaved.
+
+    Two fleets over twin networks — one compiled with the default watch
+    set, one without — each warmed on its own executable before timing.
+    Unlike :func:`_obs_overhead_once` the arms are different compiled
+    programs (the watch carry changes the scan), so this measures what
+    the watches actually add on device: a handful of O(N) reductions and
+    an O(1) carry per tick.
+    """
+    import jax
+
+    def fleet(net):
+        sched = LaneScheduler(net, capacity=n_tenants)
+        for i in range(n_tenants):
+            sched.admit(f"tenant{i}", seed=i)
+        return sched
+
+    on = fleet(build_synfire(SYNFIRE4_MINI, policy="fp16",
+                             watches="default"))
+    off = fleet(build_synfire(SYNFIRE4_MINI, policy="fp16"))
+    for sched in (on, off):
+        sched.step(chunk_ticks)  # compile + page in before timing
+        jax.block_until_ready(sched.states)
+
+    def _arm(sched):
+        sched.step(chunk_ticks)
+        jax.block_until_ready(sched.states)
+
+    try:
+        best = interleaved_best(
+            {"on": lambda: _arm(on), "off": lambda: _arm(off)}, reps)
+    finally:
+        on.close()
+        off.close()
+    return best["on"] / best["off"] - 1.0
+
+
+def bench_watch(chunk_ticks: int = 100, reps: int = 5, n_tenants: int = 64,
+                write_json: bool = True, check_gate: bool = False,
+                gate: float = 0.05,
+                retries: int = 2) -> tuple[list[dict], dict]:
+    """Watchpoint-overhead cell: watch-enabled vs watch-free µs/tick on
+    the 64-lane serve fleet.
+
+    ``check_gate`` (set by ``run.py --smoke``) enforces overhead <
+    ``gate`` (5% — the in-scan monitor budget, since the arms are
+    distinct executables and eat the same XLA layout lottery) with the
+    suite's retry-after-cool-down discipline: a stalled rep on a shared
+    container must not fail a clean PR, while a real regression (a watch
+    reduction that grew past noise) fails every attempt.
+    """
+    overhead = _watch_overhead_once(chunk_ticks, reps, n_tenants)
+    if check_gate:
+        for _ in range(retries):
+            if overhead < gate:
+                break
+            time.sleep(20)
+            overhead = min(overhead,
+                           _watch_overhead_once(chunk_ticks, reps,
+                                                n_tenants))
+        assert overhead < gate, (
+            f"watch-enabled serving chunk costs {overhead * 100:.2f}% over "
+            f"watch-free (budget {gate * 100:.0f}%) across retries — the "
+            "in-scan watch reductions grew past the monitor budget"
+        )
+    rows = [{
+        "net": f"serve_{SYNFIRE4_MINI.name}",
+        "propagation": "packed",
+        "backend": "xla",
+        "batch": n_tenants,
+        "record": "watch_overhead",
+        "chunk_ticks": chunk_ticks,
+        "reps": reps,
+        "watch_overhead_pct": round(overhead * 100, 2),
+    }]
+    if write_json:
+        _merge(os.path.join(_REPO_ROOT, "BENCH_engine.json"), rows)
+    return rows, {"watch_overhead_pct": round(overhead * 100, 2)}
+
+
 def _merge(out_path: str, rows: list[dict]) -> None:
     """Merge serve cells into BENCH_engine.json under the engine sweep's
     keyed-cell contract (net, propagation, backend, batch, record)."""
@@ -434,10 +523,12 @@ def main() -> None:
     rows, derived = bench_serve()
     pool_rows, pool_derived = bench_pool()
     obs_rows, obs_derived = bench_obs()
+    watch_rows, watch_derived = bench_watch()
     derived.update(pool_derived)
     derived.update(obs_derived)
+    derived.update(watch_derived)
     print(json.dumps(derived, indent=1))
-    for r in rows + pool_rows + obs_rows:
+    for r in rows + pool_rows + obs_rows + watch_rows:
         print(" ", r)
 
 

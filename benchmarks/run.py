@@ -12,8 +12,13 @@ without producing publication-grade timings.
 Every invocation also exports the run's observability record under
 ``results/``: ``obs_trace.jsonl`` + ``obs_trace.chrome.json`` (load the
 latter in Perfetto / chrome://tracing), ``obs_metrics.prom`` (Prometheus
-text snapshot of the runtime and bench metrics), and ``obs_health.json``
-(the SLO verdict vs the paper's M33 real-time and 8.477 MB budgets).
+text snapshot of the runtime and bench metrics), ``obs_health.json``
+(the SLO verdict vs the paper's M33 real-time and 8.477 MB budgets),
+``obs_alerts.jsonl`` (the run's watch-trip / quarantine / flight-record /
+replay events), and ``flight_manifest.json`` (every quarantine dump's
+manifest, aggregated). The alert artifacts are exercised end-to-end by a
+deliberate NaN-poisoned two-lane fleet each run — detection, quarantine,
+evidence dump, and bit-exact replay all leave a record in CI.
 """
 from __future__ import annotations
 
@@ -39,7 +44,12 @@ def _run(name, fn):
 def main(argv: list[str] | None = None) -> None:
     from benchmarks.bench_engine import bench_engine
     from benchmarks.bench_partition import bench_partition
-    from benchmarks.bench_serve import bench_obs, bench_pool, bench_serve
+    from benchmarks.bench_serve import (
+        bench_obs,
+        bench_pool,
+        bench_serve,
+        bench_watch,
+    )
     from benchmarks.report import paper_report
 
     ap = argparse.ArgumentParser(description=__doc__)
@@ -89,6 +99,14 @@ def main(argv: list[str] | None = None) -> None:
             return bench_obs(chunk_ticks=50, reps=3, write_json=False,
                              check_gate=True)
 
+        def watch_fn():
+            # watchpoint-overhead gate: the in-scan watch reductions must
+            # cost < 5% µs/tick on the warm 64-lane fleet (distinct
+            # executables per arm — the monitors' budget, not obs's 2%),
+            # retry-after-cool-down like every other timing gate
+            return bench_watch(chunk_ticks=50, reps=3, write_json=False,
+                               check_gate=True)
+
         def partition_fn():
             # core-grid smoke: Synfire4 in 2 sequential cores must stay
             # within 1.15x of the unpartitioned µs/tick (with bitwise
@@ -102,6 +120,7 @@ def main(argv: list[str] | None = None) -> None:
         serve_fn = bench_serve
         pool_fn = bench_pool
         obs_fn = bench_obs
+        watch_fn = bench_watch
         partition_fn = bench_partition
 
     results = {}
@@ -115,6 +134,8 @@ def main(argv: list[str] | None = None) -> None:
         ("bench_serve", serve_fn),  # serve_* cells, same JSON merge
         ("bench_pool", pool_fn),  # elastic-pool cells (rungs, latencies)
         ("bench_obs", obs_fn),  # obs on/off overhead (<2% gate in smoke)
+        ("bench_watch", watch_fn),  # watch on/off overhead (<5% in smoke)
+        ("watch_alert_drill", _watch_alert_drill),  # poisoned-lane e2e
         ("bench_partition", partition_fn),  # core-grid cells + 1.15x gate
         ("paper_report", report_fn),  # accuracy / real-time / energy metrics
     ]:
@@ -146,11 +167,81 @@ def main(argv: list[str] | None = None) -> None:
     _export_obs("results")
 
 
+def _watch_alert_drill() -> tuple[list[dict], dict]:
+    """End-to-end fire drill for the alert pipeline, every driver run:
+    poison one lane of a watch-enabled fp16 fleet with a NaN, assert the
+    ``nonfinite`` watch trips within one chunk, quarantine the tenant
+    with its flight-recorder window, dump the evidence under
+    ``results/quarantine`` (count-capped rotation), and replay the
+    recorded window bit-exactly. The trip/quarantine/replay events land
+    on the tracer, so ``results/obs_alerts.jsonl`` always carries a real
+    alert trail and the flight manifest a real dump."""
+    import jax
+    import numpy as np
+
+    from repro import serve
+    from repro.configs.synfire4 import SYNFIRE4_MINI, build_synfire
+    from repro.serve.scheduler import _write_lane
+
+    net = build_synfire(SYNFIRE4_MINI, policy="fp16", watches="default")
+    sched = serve.LaneScheduler(net, 2, flight_window=2)
+    sched.admit("victim", seed=0)
+    sched.admit("bystander", seed=1)
+    for _ in range(2):
+        sched.step(40)
+    lane = sched.lane_of("victim")
+    st = jax.tree.map(lambda x: x[lane], sched.states)
+    # neuron 40 is mid-chain — generator-group state is overwritten by
+    # the stimulus every tick, so a NaN there would just vanish
+    v = st.neurons.v.at[40].set(st.neurons.v.dtype.type(float("nan")))
+    sched.states = _write_lane(
+        sched.states, lane, st._replace(neurons=st.neurons._replace(v=v)))
+    sched.step(40)
+    alerts = sched.check_watches()
+    assert "victim" in alerts, "poisoned lane must trip within one chunk"
+    q = sched.quarantine("victim", alerts["victim"])
+    ddir = serve.dump_quarantine(os.path.join("results", "quarantine"), q,
+                                 keep_last=4)
+    # Post-mortem: the flight ring holds the last healthy snapshot
+    # (captured at the chunk boundary BEFORE the poison landed) and the
+    # corrupted one after. Re-inject the same fault into the healthy
+    # snapshot and replay the chunk — the corruption must reproduce
+    # bit-for-bit, because that is what makes the recording evidence.
+    ring = q.recording
+    st0 = ring[0].state
+    v0 = st0.neurons.v.at[40].set(st0.neurons.v.dtype.type(float("nan")))
+    snap0 = ring[0]._replace(
+        state=st0._replace(neurons=st0.neurons._replace(v=v0)))
+    session, _ = serve.replay(net, snap0,
+                              ring[-1].ticks - ring[0].ticks)
+    for a, b in zip(jax.tree.leaves(session.state),
+                    jax.tree.leaves(ring[-1].state)):
+        if jax.dtypes.issubdtype(a.dtype, jax.dtypes.prng_key):
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), \
+            "flight-recorder replay must be bit-exact"
+    survivors = sched.session_ids
+    sched.close()
+    row = {
+        "tripped": [v.watch for v in q.verdicts],
+        "flight_snapshots": len(ring),
+        "dump_dir": ddir,
+        "survivors": survivors,
+        "replay_bit_exact": True,
+    }
+    return [row], {"watch_alerts": len(q.verdicts),
+                   "replay_bit_exact": True}
+
+
 def _export_obs(out_dir: str) -> None:
     """Dump the driver run's observability record as CI artifacts: the
     trace (JSONL + Perfetto-loadable Chrome JSON), the Prometheus text
-    snapshot of every metric the benches and the runtime emitted, and the
-    health verdict against the paper's budgets."""
+    snapshot of every metric the benches and the runtime emitted, the
+    health verdict against the paper's budgets, the run's alert trail
+    (watch trips, quarantines, flight records, replays), and the
+    aggregated manifests of every quarantine evidence dump."""
+    import dataclasses
+
     from repro import obs
 
     obs.tracer().to_jsonl(os.path.join(out_dir, "obs_trace.jsonl"))
@@ -159,6 +250,24 @@ def _export_obs(out_dir: str) -> None:
         f.write(obs.registry().to_prometheus())
     with open(os.path.join(out_dir, "obs_health.json"), "w") as f:
         json.dump(obs.health.health_snapshot(), f, indent=1)
+
+    alert_kinds = {"watch_trip", "quarantine", "flight_record", "replay"}
+    with open(os.path.join(out_dir, "obs_alerts.jsonl"), "w") as f:
+        for e in obs.tracer().snapshot():
+            if e.name in alert_kinds:
+                f.write(json.dumps(dataclasses.asdict(e), default=str)
+                        + "\n")
+
+    manifests = []
+    qdir = os.path.join(out_dir, "quarantine")
+    if os.path.isdir(qdir):
+        for name in sorted(os.listdir(qdir)):
+            mpath = os.path.join(qdir, name, "manifest.json")
+            if os.path.isfile(mpath):
+                with open(mpath) as f:
+                    manifests.append({"dump": name, **json.load(f)})
+    with open(os.path.join(out_dir, "flight_manifest.json"), "w") as f:
+        json.dump({"dumps": manifests}, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -10,14 +10,26 @@ What the operator of a `repro.serve` deployment actually sees — the
 2. Serve chunks and flush. Every chunk dispatch lands in the
    ``repro_serve_chunk_latency_ms`` / ``repro_serve_us_per_tick``
    histograms; jit dispatches are classified compile vs cache hit.
-3. Dump the flight recorder: a JSONL trace, a Chrome trace you can open
-   at https://ui.perfetto.dev, the Prometheus text snapshot, and the
-   health verdict against the paper's budgets (real-time factor on the
-   Cortex-M33 spec, per-rung bytes vs the 8.477 MB MCU ceiling).
+3. Dump the observability record: a JSONL trace, a Chrome trace you can
+   open at https://ui.perfetto.dev, the Prometheus text snapshot, and
+   the health verdict against the paper's budgets (real-time factor on
+   the Cortex-M33 spec, per-rung bytes vs the 8.477 MB MCU ceiling).
+4. **Incident drill**: one tenant's fp16 membrane state is deliberately
+   poisoned with a NaN. The network was compiled with
+   ``watches="default"``, so the in-scan ``nonfinite`` watch counts the
+   bad values inside the scan (O(1) memory, zero numeric footprint) and
+   ``check_watches()`` trips within one chunk; the tenant is
+   **quarantined** — evicted with its final snapshot, the tripped
+   verdicts, and the flight recorder's last chunk-boundary snapshots —
+   its evidence dumped to disk under a count-capped retention policy,
+   and the recorded window **replayed bit-exactly** as a solo session
+   for the post-mortem. Survivors never notice (asserted bitwise in
+   ``tests/test_watch.py``).
 
 Observability is default-on and host-side only — device programs and
-results are bitwise identical with it off (``tests/test_obs.py``), and
-the serving overhead is gated < 2% in CI (``benchmarks/run.py --smoke``).
+results are bitwise identical with it off (``tests/test_obs.py``), the
+serving overhead is gated < 2% and the watch-enabled overhead < 5% in CI
+(``benchmarks/run.py --smoke``).
 
   PYTHONPATH=src python examples/observability.py
 """
@@ -27,9 +39,20 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro import obs
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import obs, serve
 from repro.configs.synfire4 import SYNFIRE4_MINI, build_synfire
 from repro.serve import ServePool
+from repro.serve.scheduler import _write_lane
+
+# Sustained stimulus keeps the tenants firing: the default `silent`
+# watch would (correctly!) trip on the mini config at rest, which is a
+# different demo than the NaN incident below.
+DRIVEN = dataclasses.replace(SYNFIRE4_MINI, stim_rate_hz=60.0)
 
 CHUNK = 100  # ticks per serving chunk (= 100 ms of model time)
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
@@ -38,8 +61,8 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 def main() -> None:
     obs.configure(reset=True, enabled=True)  # start a clean flight record
 
-    net = build_synfire(SYNFIRE4_MINI, policy="fp16")
-    pool = ServePool(rungs=(2, 8))
+    net = build_synfire(DRIVEN, policy="fp16", watches="default")
+    pool = ServePool(rungs=(2, 8), flight_window=4)
 
     # Two tenants fit rung 2; the third admission forces the up-rung
     # migration (export 2 lanes -> build rung 8 -> restore 2 lanes) before
@@ -86,12 +109,73 @@ def main() -> None:
     print(f"chrome trace (open in Perfetto): {trace_chrome}")
     print(f"prometheus snapshot: {prom_path}")
 
+    # Health verdict over the *clean* serving phase (the incident drill
+    # below deliberately adds compile-laden post-mortem chunks that have
+    # no business in the serving-latency p95).
     health = obs.health.health_snapshot(net)
     print(f"\nhealth: {health['status']} on {health['hardware']}")
     for check in health["checks"]:
         print(f"  [{check['status']:4s}] {check['name']}: {check['detail']}")
     with open(os.path.join(OUT_DIR, "observability_health.json"), "w") as f:
         json.dump(health, f, indent=1)
+
+    # -- incident drill: NaN tenant -> trip -> quarantine -> replay ---------
+    print("\n--- incident drill ---")
+    assert pool.check_watches() == {}  # healthy fleet: nothing trips
+
+    # Poison tenant1's membrane state the way a real fp16 overflow would
+    # (lane surgery stands in for the numerics going bad on their own).
+    # Neuron 40 sits mid-chain: generator-group neurons are overwritten
+    # by the stimulus every tick, so a NaN there would just vanish.
+    sched = pool.ladder_of("tenant1").scheduler
+    lane = sched.lane_of("tenant1")
+    st = jax.tree.map(lambda x: x[lane], sched.states)
+    v = st.neurons.v.at[40].set(st.neurons.v.dtype.type(float("nan")))
+    sched.states = _write_lane(
+        sched.states, lane, st._replace(neurons=st.neurons._replace(v=v)))
+
+    pool.step(CHUNK)  # ONE chunk later...
+    alerts = pool.check_watches()
+    for sid, verdicts in alerts.items():
+        for v in verdicts:
+            print(f"TRIPPED {sid}: watch={v.watch} value={v.value:g} "
+                  f"limit={v.limit:g} ({v.detail})")
+
+    q = pool.quarantine("tenant1", alerts["tenant1"])
+    print(f"quarantined tenant1 at tick {q.snapshot.ticks}; flight "
+          f"recorder holds {len(q.recording)} chunk-boundary snapshots; "
+          f"survivors: {pool.session_ids}")
+
+    dump_dir = serve.dump_quarantine(
+        os.path.join(OUT_DIR, "quarantine"), q, keep_last=4)
+    print(f"evidence dumped (count-capped retention): {dump_dir}")
+
+    # Post-mortem: the ring's second-to-last snapshot is the last healthy
+    # chunk boundary — the one the poison landed on. Re-inject the same
+    # fault there and replay the incident chunk solo, with the full
+    # raster the serving fleet never materialized; the corrupted state
+    # the watch tripped on reproduces bit-for-bit.
+    ring = q.recording
+    st0 = ring[-2].state
+    bad = st0.neurons.v.at[40].set(st0.neurons.v.dtype.type(float("nan")))
+    snap0 = ring[-2]._replace(
+        state=st0._replace(neurons=st0.neurons._replace(v=bad)))
+    session, out = serve.replay(net, snap0, ring[-1].ticks - ring[-2].ticks)
+    for a, b in zip(jax.tree.leaves(session.state),
+                    jax.tree.leaves(ring[-1].state)):
+        if jax.dtypes.issubdtype(a.dtype, jax.dtypes.prng_key):
+            a, b = jax.random.key_data(a), jax.random.key_data(b)
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    raster = np.asarray(out["spikes"])
+    print(f"replayed ticks {ring[-2].ticks}..{ring[-1].ticks}: "
+          f"[{raster.shape[0]}x{raster.shape[1]}] raster, "
+          f"{int(raster.sum())} spikes — the incident chunk reproduced "
+          "bit-exactly under the microscope")
+
+    # The incident is now on the record: the watchpoint health check
+    # turns WARN for the rest of this process's life.
+    hc = obs.health.watch_check(obs.registry())
+    print(f"  [{hc.status:4s}] {hc.name}: {hc.detail}")
 
 
 if __name__ == "__main__":

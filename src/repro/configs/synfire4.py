@@ -105,6 +105,7 @@ def build_synfire(
     budget: int | None = MCU_BUDGET_BYTES,
     monitor_ms_hint: int = 1000,
     monitors: str | tuple | None = "default",
+    watches: str | tuple | None = None,
     method: str = "euler",
     backend: str = "xla",
     propagation: str = "packed",
@@ -132,6 +133,12 @@ def build_synfire(
     setting). Under ``propagation="sparse"``/``"auto"`` those projections
     store CSR fan-in rows, which is what keeps a plastic ``SYNFIRE4_X10``
     inside the paper's 8.477 MB budget (``benchmarks/bench_engine.py``).
+
+    ``watches`` attaches in-scan watchpoints (``repro.obs.watch``;
+    ``"default"`` = NaN/Inf sentinel + rate band + silent-network
+    detection) whose O(1) accumulators ride every run's scan carry and
+    drain as typed verdicts at chunk boundaries — outputs stay bitwise
+    identical watch-on vs watch-off.
 
     ``homeo_chain`` + ``homeostasis_period`` add CARLsim's slow-timer
     synaptic scaling to the same chain projections (requires
@@ -177,7 +184,7 @@ def build_synfire(
     ledger = MemoryLedger(budget=budget, name=f"{cfg.name}/{policy}")
     return net.compile(policy=policy, ledger=ledger,
                        monitor_ms_hint=monitor_ms_hint, monitors=monitors,
-                       method=method,
+                       watches=watches, method=method,
                        backend=backend, propagation=propagation,
                        pallas_interpret=pallas_interpret,
                        homeostasis_period=homeostasis_period,

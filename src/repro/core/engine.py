@@ -83,6 +83,7 @@ from repro import obs
 from repro.core import backend as be
 from repro.core import neurons as nrn
 from repro.kernels import ops as kops
+from repro.obs import watch as wat
 from repro.telemetry import monitors as tel
 from repro.core.conductance import coba_current, decay_and_deliver
 from repro.core.network import CompiledNetwork, NetParams, NetState, NetStatic
@@ -387,6 +388,7 @@ def _run_impl(
     gen_base: jax.Array | None = None,  # session counter-keyed gen stream
     tel_carry: tuple | None = None,  # resume telemetry accumulators
     return_tel_carry: bool = False,
+    watch_carry: tuple | None = None,  # resume watchpoint accumulators
     active: jax.Array | None = None,  # scalar bool: serving-lane gate
 ):
     if record not in _RECORD_MODES:
@@ -422,6 +424,12 @@ def _run_impl(
                 f"({static.homeo_period}) — both ride the same outer scan")
     want_raster = record in ("raster", "both")
     want_mon = record in ("monitors", "both")
+    # Watchpoints are compiled into the network (NetStatic.watches), not
+    # chosen per call: when present their accumulators ride EVERY run and
+    # the final carry is always returned (outputs["watch_carry"]) so the
+    # fold is never dead code. With watches=() the carry slot is an empty
+    # pytree and the program is byte-identical to a watch-free build.
+    want_watch = bool(static.watches)
     if want_mon and not static.monitors:
         raise ValueError(
             "record requests monitors but the network was compiled with "
@@ -436,11 +444,11 @@ def _run_impl(
         if dopamine is not None
         else jnp.zeros((n_steps, 0), jnp.float32)
     )
-    # Local step index for telemetry (snapshot strides); width-0 when
-    # monitors are off so the raster-mode program is byte-identical.
+    # Local step index for telemetry/watch strides; width-0 when neither
+    # is active so the raster-mode program is byte-identical.
     ix_xs = (
         jnp.arange(n_steps, dtype=jnp.int32).reshape(n_steps, 1)
-        if want_mon
+        if want_mon or want_watch
         else jnp.zeros((n_steps, 0), jnp.int32)
     )
 
@@ -503,12 +511,14 @@ def _run_impl(
 
     tel0 = (tel_carry if tel_carry is not None else
             tel.init_carry(static, n_steps)) if want_mon else ()
+    watch0 = (watch_carry if watch_carry is not None else
+              wat.init_carry(static)) if want_watch else ()
     # Per-neuron spike counts over the current homeostasis segment, reset
     # at each boundary (the slow timer's input; empty slot when disabled).
     cnt0 = jnp.zeros((static.n,), jnp.int32) if has_homeo else ()
 
     def body_wrap(carry, xs):
-        st, tel_c, cnt = carry
+        st, tel_c, wat_c, cnt = carry
         ie, da, gu, ix = xs
         ie = ie if ie.shape[-1] else None  # static shape: decided at trace time
         da = da[0] if da.shape[-1] else None
@@ -523,13 +533,18 @@ def _run_impl(
                                        out.v, new_state.weights)
         else:
             tel_ys = None
+        if want_watch:
+            # Watchpoints are the same pure-read fold: O(1) health
+            # reductions that never feed back into the dynamics.
+            wat_c = wat.update(static, wat_c, ix[0], out.spikes,
+                               out.v, new_state.weights)
         if has_homeo:
             cnt = cnt + out.spikes.astype(jnp.int32)
         ys = (out.spikes if want_raster else None,
               out.v if record_v else None,
               out.i_syn if record_i else None,
               tel_ys)
-        return (new_state, tel_c, cnt), ys
+        return (new_state, tel_c, wat_c, cnt), ys
 
     # Segment the scan when anything fires at sub-run boundaries: the
     # homeostasis slow timer and/or the per-chunk generator draw. Both ride
@@ -537,9 +552,9 @@ def _run_impl(
     seg_len = static.homeo_period if has_homeo else (
         gen_chunk if chunked else None)
     if seg_len is None:
-        (final, tel_final, _), ys = jax.lax.scan(
-            body_wrap, (state, tel0, cnt0), (ie_xs, da_xs, gu_xs, ix_xs),
-            length=n_steps)
+        (final, tel_final, watch_final, _), ys = jax.lax.scan(
+            body_wrap, (state, tel0, watch0, cnt0),
+            (ie_xs, da_xs, gu_xs, ix_xs), length=n_steps)
     else:
         n_seg = n_steps // seg_len
 
@@ -565,13 +580,13 @@ def _run_impl(
                                          (ie_c, da_c, gu_c, ix_c),
                                          length=seg_len)
             if has_homeo:
-                st, tel_c, cnt = carry
+                st, tel_c, wat_c, cnt = carry
                 st = _apply_homeostasis(static, st, cnt, active)
-                carry = (st, tel_c, jnp.zeros_like(cnt))
+                carry = (st, tel_c, wat_c, jnp.zeros_like(cnt))
             return carry, seg_ys
 
-        (final, tel_final, _), ys = jax.lax.scan(
-            seg_body, (state, tel0, cnt0), xs, length=n_seg)
+        (final, tel_final, watch_final, _), ys = jax.lax.scan(
+            seg_body, (state, tel0, watch0, cnt0), xs, length=n_seg)
         # Per-tick outputs come back [n_seg, seg_len, ...]; flatten the
         # segment axes so every record mode sees the usual [T, ...].
         ys = jax.tree.map(
@@ -590,6 +605,11 @@ def _run_impl(
             # Raw accumulators, resumable: feed back as ``tel_carry`` on
             # the next chunked call (repro.serve.SessionMonitors).
             outputs["tel_carry"] = tel_final
+    if want_watch:
+        # Raw watch accumulators — always returned for compiled watches
+        # (feed back as ``watch_carry``; drain host-side with
+        # ``repro.obs.watch.drain`` at chunk/flush boundaries).
+        outputs["watch_carry"] = watch_final
     return final, outputs
 
 
@@ -611,6 +631,7 @@ def run(
     gen_base: jax.Array | None = None,
     tel_carry: tuple | None = None,
     return_tel_carry: bool = False,
+    watch_carry: tuple | None = None,
     active: jax.Array | None = None,
 ):
     """Scan ``step`` for ``n_steps`` ticks; returns (state, outputs).
@@ -642,6 +663,10 @@ def run(
     * ``active`` — scalar bool lane gate: when False the generators are
       silenced and homeostasis holds, so an idle serving lane parks at rest
       and contributes no spike events.
+    * ``watch_carry`` — resume in-scan watchpoint accumulators
+      (``repro.obs.watch``; compiled via ``compile(watches=...)``). When
+      the network carries watches, ``outputs["watch_carry"]`` is always
+      returned; drain it host-side at chunk boundaries.
 
     Networks compiled with ``homeostasis_period=p`` apply CARLsim's
     slow-timer synaptic scaling every p ticks from in-scan segment spike
@@ -652,7 +677,8 @@ def run(
                      dopamine=dopamine, record=record, record_v=record_v,
                      record_i=record_i, gen_chunk=gen_chunk,
                      gen_base=gen_base, tel_carry=tel_carry,
-                     return_tel_carry=return_tel_carry, active=active)
+                     return_tel_carry=return_tel_carry,
+                     watch_carry=watch_carry, active=active)
 
 
 @partial(jax.jit, static_argnames=("static", "n_steps", "batch", "record",

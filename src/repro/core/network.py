@@ -49,6 +49,7 @@ from repro.core.synapses import (
     init_stp_state,
 )
 from repro.memory import MemoryLedger
+from repro.obs import watch as wspec
 from repro.precision import PrecisionPolicy, get_policy
 from repro.telemetry import monitors as telem
 
@@ -251,6 +252,11 @@ class NetStatic:
     # must stay loop-invariant).
     homeo: tuple[HomeostasisConfig | None, ...] = ()
     homeo_period: int = 0  # ticks between applications (0 = never)
+    # Compiled in-scan watchpoints (repro.obs.watch); when non-empty the
+    # engine folds their O(1) accumulators into the scan carry on EVERY
+    # run and returns them as outputs["watch_carry"]. Pure reads of the
+    # step output — outputs stay bitwise identical watch-on vs watch-off.
+    watches: tuple = ()
 
     @property
     def gen_spans(self) -> tuple[tuple[int, int], ...]:
@@ -413,6 +419,7 @@ class NetworkBuilder:
         ledger: MemoryLedger | None = None,
         monitor_ms_hint: int = 0,
         monitors: str | tuple | None = "default",
+        watches: str | tuple | None = None,
         backend: str = "xla",
         propagation: str = "packed",
         pallas_interpret: bool | None = None,
@@ -666,6 +673,17 @@ class NetworkBuilder:
             homeo_states.append(jnp.zeros((specs[j].post_size,), jnp.float32))
         mon_specs = telem.resolve(monitors, n=n, n_projections=len(specs),
                                   dt=dt)
+        # Watchpoint baselines (WeightDrift) come from the state0 weights,
+        # via the exact L2 expression telemetry.WeightNorm reports.
+        watch_specs = wspec.resolve(
+            watches, n=n, n_projections=len(specs), dt=dt,
+            baseline_norms=tuple(
+                float(jnp.sqrt(jnp.sum(jnp.square(w.astype(jnp.float32)))))
+                for w in weights) if watches is not None else None)
+        if partition is not None and watch_specs:
+            raise ValueError(
+                "watches are not supported on partitioned networks yet — "
+                "the per-core lowerings carry no watch accumulators")
         with ledger.stage("7. Auxiliary Data"):
             ledger.register("stdp.traces", tuple(s for s in stdp_states if s is not None))
             if any(h is not None for h in homeo_states):
@@ -682,6 +700,11 @@ class NetworkBuilder:
                     "monitor.telemetry",
                     telem.carry_struct(mon_specs, n, len(specs),
                                        monitor_ms_hint or 1000),
+                )
+            if watch_specs:
+                ledger.register(
+                    "monitor.watch",
+                    wspec.carry_struct(watch_specs, n, len(specs)),
                 )
 
         model_codes = np.asarray(neuron_params.model)
@@ -713,6 +736,7 @@ class NetworkBuilder:
             buckets=buckets, plastic_csr=plastic_csr, stp_csr=stp_csr,
             fused=fused, fused_kernel=fused_kernel, monitors=mon_specs,
             homeo=tuple(homeo_cfgs), homeo_period=int(homeostasis_period),
+            watches=watch_specs,
         )
         params = NetParams(
             neuron=neuron_params,

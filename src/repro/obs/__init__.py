@@ -183,4 +183,7 @@ def __getattr__(name: str):
     if name == "health":  # lazy: health imports repro.memory/core.sizing
         import repro.obs.health as health
         return health
+    if name == "watch":  # lazy: watch imports jax
+        import repro.obs.watch as watch
+        return watch
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -45,6 +45,7 @@ __all__ = [
     "measured_serve_check",
     "realtime_check",
     "rung_checks",
+    "watch_check",
 ]
 
 PASS, WARN, FAIL = "pass", "warn", "fail"
@@ -143,6 +144,30 @@ def measured_serve_check(registry, *, dt_ms: float = 1.0,
                 "(host dispatch wall, all rungs merged)"))
 
 
+def watch_check(registry) -> HealthCheck | None:
+    """Watchpoint verdict: WARN when any in-scan watch tripped this
+    process (quarantine count in the detail); None until a watch-enabled
+    fleet has been checked (neither counter touched)."""
+    trips_c = registry.get("repro_watch_trips_total")
+    quars_c = registry.get("repro_quarantines_total")
+    if trips_c is None and quars_c is None:
+        return None
+    trips = sum(trips_c.series().values()) if trips_c is not None else 0.0
+    quars = sum(quars_c.series().values()) if quars_c is not None else 0.0
+    by_watch: dict[str, float] = {}
+    if trips_c is not None:
+        for key, value in trips_c.series().items():
+            name = dict(key).get("watch", "?")
+            by_watch[name] = by_watch.get(name, 0.0) + value
+    detail = (f"{int(trips)} watch trip(s) "
+              f"({', '.join(f'{k}={int(v)}' for k, v in sorted(by_watch.items()))}), "
+              f"{int(quars)} tenant(s) quarantined"
+              if trips else "no watch trips recorded")
+    return HealthCheck(
+        name="watchpoints", status=WARN if trips else PASS,
+        value=trips, limit=0.0, detail=detail)
+
+
 def _rungs_from_registry(registry) -> dict[str, float]:
     g = registry.get("repro_serve_rung_bytes")
     if g is None or g.kind != "gauge":
@@ -215,6 +240,10 @@ def health_snapshot(net=None, *, hw: HardwareSpec = M33,
     measured = measured_serve_check(registry, dt_ms=dt_ms)
     if measured is not None:
         checks.append(measured)
+
+    watches = watch_check(registry)
+    if watches is not None:
+        checks.append(watches)
 
     status = max((c.status for c in checks),
                  key=_SEVERITY.__getitem__, default=PASS)

@@ -87,6 +87,17 @@ DECLARED: dict[str, tuple[str, str, tuple | None]] = {
         "counter", "Lane snapshots restored into a scheduler", None),
     "repro_serve_flushes_total": (
         "counter", "Telemetry flushes drained to the host", None),
+    "repro_watch_trips_total": (
+        "counter",
+        "In-scan watchpoint verdicts tripped, by watch name and rung", None),
+    "repro_quarantines_total": (
+        "counter", "Tripped tenants quarantined off the serving fleet", None),
+    "repro_flight_records_total": (
+        "counter",
+        "Flight-recorder chunk-boundary lane snapshots captured", None),
+    "repro_quarantine_dump_bytes": (
+        "gauge", "On-disk bytes of retained quarantine dumps per directory",
+        None),
     "repro_serve_lane_occupancy": (
         "gauge", "Occupied lanes per scheduler rung", None),
     "repro_serve_lane_capacity": (
@@ -251,14 +262,24 @@ class Histogram(_Metric):
 
     def observe(self, value: float, **labels: Any) -> None:
         key = _labels_key(labels)
-        i = bisect.bisect_left(self.buckets, float(value))
+        v = float(value)
+        if math.isfinite(v):
+            i = bisect.bisect_left(self.buckets, v)
+        else:
+            # Non-finite samples (NaN from a poisoned timer, ±inf from an
+            # upstream zero division) land in the overflow bucket and stay
+            # out of the running sum — bisect on NaN would silently file
+            # it under the SMALLEST bucket and one bad sample would turn
+            # every future sum/mean export into NaN.
+            i = len(self.buckets)
+            v = 0.0
         with self._lock:
             s = self._series.get(key)
             if s is None:
                 s = self._series[key] = [[0] * (len(self.buckets) + 1),
                                          0.0, 0]
             s[0][i] += 1
-            s[1] += float(value)
+            s[1] += v
             s[2] += 1
 
     def count(self, **labels: Any) -> int:

@@ -50,6 +50,10 @@ EVENT_KINDS = frozenset({
     "route",              # ServePool fingerprint routing decision
     "checkpoint_save",    # lifecycle save_session / save_lane
     "checkpoint_restore", # lifecycle restore_session / restore_lane
+    "watch_trip",         # an in-scan watchpoint verdict tripped (alert)
+    "quarantine",         # a tripped tenant evicted with its evidence
+    "flight_record",      # flight recorder captured chunk-boundary snaps
+    "replay",             # post-mortem re-run from a recorded snapshot
 })
 
 

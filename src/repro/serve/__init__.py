@@ -17,16 +17,27 @@ layer on top of the simulation engine.
   and a cross-topology admission router keyed by compile fingerprint.
 * ``repro.serve.lifecycle`` — chunk-boundary homeostasis rationale +
   bit-exact session and lane checkpoint/restore (:func:`save_session`,
-  :func:`restore_session`, :func:`save_lane`, :func:`restore_lane`).
+  :func:`restore_session`, :func:`save_lane`, :func:`restore_lane`),
+  plus count/byte-capped quarantine-dump retention
+  (:func:`dump_quarantine`, :func:`rotate_dumps`).
+* Watchpoints & post-mortems — networks compiled with ``watches=...``
+  carry in-scan sentinels (``repro.obs.watch``); schedulers/pools drain
+  them (``check_watches``), keep a per-tenant flight-recorder window
+  (``flight_window=K``), and evict tripped tenants with their evidence
+  (``quarantine`` → :class:`Quarantined` →
+  :func:`repro.serve.recorder.replay` for a bit-exact re-run).
 
 See ``examples/edge_serving.py`` and the README's "Serving sessions at
 the edge" / "Serving at scale" sections for the end-to-end shape.
 """
 from repro.serve.lifecycle import (
     CheckpointError,
+    RetentionError,
+    dump_quarantine,
     latest_session_step,
     restore_lane,
     restore_session,
+    rotate_dumps,
     save_lane,
     save_session,
 )
@@ -36,7 +47,13 @@ from repro.serve.pool import (
     ServePool,
     compile_fingerprint,
 )
-from repro.serve.scheduler import Evicted, LaneScheduler, LaneSnapshot
+from repro.serve.recorder import replay
+from repro.serve.scheduler import (
+    Evicted,
+    LaneScheduler,
+    LaneSnapshot,
+    Quarantined,
+)
 from repro.serve.session import Session, SessionMonitors
 
 __all__ = [
@@ -45,14 +62,19 @@ __all__ = [
     "Evicted",
     "LaneScheduler",
     "LaneSnapshot",
+    "Quarantined",
     "RUNGS",
+    "RetentionError",
     "ServePool",
     "Session",
     "SessionMonitors",
     "compile_fingerprint",
+    "dump_quarantine",
     "latest_session_step",
+    "replay",
     "restore_lane",
     "restore_session",
+    "rotate_dumps",
     "save_lane",
     "save_session",
 ]

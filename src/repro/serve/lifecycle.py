@@ -37,7 +37,9 @@ a bare ``KeyError`` from inside npz internals.
 """
 from __future__ import annotations
 
+import json
 import os
+import shutil
 import zipfile
 
 import jax
@@ -52,8 +54,9 @@ from repro.serve.scheduler import LaneSnapshot
 from repro.serve.session import Session
 from repro.telemetry import monitors as tel
 
-__all__ = ["CheckpointError", "save_session", "restore_session",
-           "latest_session_step", "save_lane", "restore_lane"]
+__all__ = ["CheckpointError", "RetentionError", "save_session",
+           "restore_session", "latest_session_step", "save_lane",
+           "restore_lane", "dump_quarantine", "rotate_dumps"]
 
 #: Format version stamped into every lifecycle checkpoint. Bump when the
 #: payload layout changes incompatibly; restore refuses other versions.
@@ -74,6 +77,12 @@ class CheckpointError(RuntimeError):
         super().__init__(message)
         self.path = path
         self.key = key
+
+
+class RetentionError(CheckpointError):
+    """Quarantine-dump retention misconfigured or unenforceable —
+    invalid caps (``keep_last < 1``, ``max_bytes < 1``) or a dump root
+    that exists but is not a directory."""
 
 
 def _is_key(leaf) -> bool:
@@ -272,3 +281,120 @@ def restore_lane(ckpt_dir: str, net: CompiledNetwork | Engine, *,
 def latest_session_step(ckpt_dir: str) -> int | None:
     """Newest saved session step (tick cursor), or None."""
     return ckpt.latest_step(ckpt_dir)
+
+
+# -- quarantine dump retention ------------------------------------------------
+#
+# A quarantined tenant leaves evidence on disk: its final snapshot, the
+# flight-recorder window behind it, and a manifest tying both to the
+# verdicts that tripped. A long-lived serving process quarantining
+# repeatedly must not grow an unbounded evidence directory — retention
+# is count- and byte-capped, oldest dumps dropped first, the newest
+# always kept (evidence you just wrote is never the evidence you shed).
+
+def _dump_dirs(dump_dir: str) -> list[str]:
+    """Completed dump directories under ``dump_dir``, oldest first.
+    Only directories holding a ``manifest.json`` count — a crashed
+    half-written dump (no manifest yet) is never rotation's to delete."""
+    if not os.path.isdir(dump_dir):
+        return []
+    out = []
+    for name in os.listdir(dump_dir):
+        d = os.path.join(dump_dir, name)
+        if os.path.isdir(d) and os.path.isfile(
+                os.path.join(d, "manifest.json")):
+            out.append(d)
+    out.sort(key=lambda d: (os.path.getmtime(
+        os.path.join(d, "manifest.json")), d))
+    return out
+
+
+def _dir_bytes(d: str) -> int:
+    total = 0
+    for root, _, files in os.walk(d):
+        for f in files:
+            total += os.path.getsize(os.path.join(root, f))
+    return total
+
+
+def rotate_dumps(dump_dir: str, *, keep_last: int = 8,
+                 max_bytes: int | None = None) -> list[str]:
+    """Enforce the retention caps over ``dump_dir``; returns what was
+    removed (paths, oldest first).
+
+    Keeps at most ``keep_last`` dumps and (when ``max_bytes`` is set) at
+    most that many bytes total, dropping oldest-manifest first — but the
+    newest dump survives even if it alone exceeds ``max_bytes``. The
+    post-rotation footprint lands on the
+    ``repro_quarantine_dump_bytes`` gauge.
+    """
+    if keep_last < 1:
+        raise RetentionError(
+            f"keep_last must be >= 1, got {keep_last} — retention may "
+            "never delete the newest dump", path=dump_dir)
+    if max_bytes is not None and max_bytes < 1:
+        raise RetentionError(
+            f"max_bytes must be >= 1 (or None), got {max_bytes}",
+            path=dump_dir)
+    if os.path.exists(dump_dir) and not os.path.isdir(dump_dir):
+        raise RetentionError(
+            f"dump root is not a directory: {dump_dir}", path=dump_dir)
+    dumps = _dump_dirs(dump_dir)
+    sizes = {d: _dir_bytes(d) for d in dumps}
+    removed: list[str] = []
+    while len(dumps) > 1 and (
+            len(dumps) > keep_last
+            or (max_bytes is not None
+                and sum(sizes[d] for d in dumps) > max_bytes)):
+        victim = dumps.pop(0)
+        shutil.rmtree(victim)
+        removed.append(victim)
+    obs.gauge("repro_quarantine_dump_bytes",
+              float(sum(sizes[d] for d in dumps)))
+    return removed
+
+
+def dump_quarantine(dump_dir: str, q, *, keep_last: int = 8,
+                    max_bytes: int | None = None) -> str:
+    """Persist a :class:`~repro.serve.Quarantined` tenant's evidence;
+    returns the dump directory.
+
+    Layout (one directory per quarantine, named by session id and tick
+    cursor so repeat offenders don't collide)::
+
+        <dump_dir>/<session_id>_<ticks>/
+            final/step_*.npz    # the evicted lane's snapshot
+            flight/step_*.npz   # the flight-recorder window, one per
+                                # chunk boundary (restore_lane-readable)
+            manifest.json       # verdicts, tick cursors, files, bytes
+
+    Every snapshot goes through :func:`save_lane`, so any of them feeds
+    ``repro.serve.recorder.replay`` or a scheduler ``restore`` directly.
+    The manifest is written last (tmp + rename): a dump without one is a
+    crashed write, which rotation deliberately ignores. Retention caps
+    are enforced on the way out via :func:`rotate_dumps`.
+    """
+    snap = q.snapshot
+    ddir = os.path.join(dump_dir, f"{q.session_id}_{snap.ticks:010d}")
+    os.makedirs(ddir, exist_ok=True)
+    with obs.span("checkpoint_save", kind="quarantine_dump",
+                  session=q.session_id, step=snap.ticks):
+        final_path = save_lane(os.path.join(ddir, "final"), snap)
+        flight_paths = [save_lane(os.path.join(ddir, "flight"), s)
+                        for s in q.recording]
+        manifest = {
+            "format": _CKPT_FORMAT,
+            "session_id": q.session_id,
+            "ticks": int(snap.ticks),
+            "verdicts": [v.as_dict() for v in q.verdicts],
+            "final": os.path.relpath(final_path, ddir),
+            "flight": [os.path.relpath(p, ddir) for p in flight_paths],
+            "flight_ticks": [int(s.ticks) for s in q.recording],
+            "bytes": _dir_bytes(ddir),
+        }
+        tmp = os.path.join(ddir, "manifest.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=2)
+        os.replace(tmp, os.path.join(ddir, "manifest.json"))
+    rotate_dumps(dump_dir, keep_last=keep_last, max_bytes=max_bytes)
+    return ddir

@@ -43,7 +43,12 @@ from jax.sharding import Mesh
 
 from repro import obs
 from repro.core.network import CompiledNetwork, NetState
-from repro.serve.scheduler import Evicted, LaneScheduler, LaneSnapshot
+from repro.serve.scheduler import (
+    Evicted,
+    LaneScheduler,
+    LaneSnapshot,
+    Quarantined,
+)
 
 __all__ = ["CapacityLadder", "ServePool", "compile_fingerprint", "RUNGS"]
 
@@ -93,10 +98,12 @@ class CapacityLadder:
     def __init__(self, net: CompiledNetwork, *, rungs=RUNGS,
                  record: str = "monitors", mesh: Mesh | None = None,
                  mesh_axis: str = "lanes", idle_after: int = 2,
-                 ledger_prefix: str = "", lane_chooser=None):
+                 ledger_prefix: str = "", lane_chooser=None,
+                 flight_window: int = 0):
         if not rungs:
             raise ValueError("need at least one rung")
         self.net = net
+        self.flight_window = flight_window
         # Optional admission policy hook: called with the live scheduler,
         # returns a free lane index (or None for first-fit). The pool's
         # best-fit policy routes through this.
@@ -139,7 +146,8 @@ class CapacityLadder:
             return LaneScheduler(
                 self.net, n, record=self.record, mesh=mesh,
                 mesh_axis=self.mesh_axis,
-                ledger_key=f"{self.ledger_prefix}rung{n}")
+                ledger_key=f"{self.ledger_prefix}rung{n}",
+                flight_window=self.flight_window)
 
     def _migrate(self, new_rung: int) -> None:
         """Move the whole fleet to ``new_rung`` through raw lane snapshots
@@ -150,12 +158,18 @@ class CapacityLadder:
         with obs.span("rung_migrate", from_rung=old_rung, to_rung=new_rung,
                       tenants=self.occupancy):
             snaps: list[LaneSnapshot] = []
+            flights: dict = {}
             if self._sched is not None:
                 snaps = self._sched.export_all()
+                flights = dict(self._sched._flight)
                 self._sched.close()
             self._sched = self._build(new_rung)
             for snap in snaps:
                 self._sched.restore(snap)
+            # Flight-recorder rings survive the migration (they are host
+            # deques, not lane payloads) — post-mortems keep their window
+            # across rung moves.
+            self._sched._flight.update(flights)
         obs.inc("repro_rung_migrations_total",
                 direction="up" if new_rung > old_rung else "down")
         self.migrations += 1
@@ -191,8 +205,24 @@ class CapacityLadder:
     def export(self, session_id: str) -> LaneSnapshot:
         return self._sched.export(session_id)
 
+    def snapshot(self, session_id: str) -> LaneSnapshot:
+        """Non-destructive lane snapshot (tenant keeps serving)."""
+        return self._sched.snapshot(session_id)
+
     def flush(self, session_id: str) -> dict:
         return self._sched.flush(session_id)
+
+    def check_watches(self) -> dict[str, list]:
+        """Drain the rung's watch accumulators (see
+        ``LaneScheduler.check_watches``); {} before the first admit."""
+        return self._sched.check_watches() if self._sched else {}
+
+    def quarantine(self, session_id: str, verdicts=()) -> Quarantined:
+        return self._sched.quarantine(session_id, verdicts)
+
+    def flight(self, session_id: str) -> tuple:
+        """The tenant's recorded flight window, oldest first."""
+        return self._sched.flight(session_id) if self._sched else ()
 
     def step(self, n_ticks: int) -> None:
         """Advance every lane one chunk, then apply the down-rung rule:
@@ -234,7 +264,7 @@ class ServePool:
     def __init__(self, *, rungs=RUNGS, record: str = "monitors",
                  mesh: Mesh | None = None, mesh_axis: str = "lanes",
                  idle_after: int = 2, policy: str = "first_fit",
-                 bin_lanes: int = 8):
+                 bin_lanes: int = 8, flight_window: int = 0):
         if policy not in ("first_fit", "best_fit"):
             raise ValueError(
                 f"unknown admission policy {policy!r} — "
@@ -242,7 +272,8 @@ class ServePool:
         if bin_lanes < 1:
             raise ValueError(f"bin_lanes must be >= 1, got {bin_lanes}")
         self._opts = dict(rungs=rungs, record=record, mesh=mesh,
-                          mesh_axis=mesh_axis, idle_after=idle_after)
+                          mesh_axis=mesh_axis, idle_after=idle_after,
+                          flight_window=flight_window)
         self.policy = policy
         self.bin_lanes = bin_lanes
         self._ladders: dict[str, CapacityLadder] = {}
@@ -381,3 +412,32 @@ class ServePool:
         """One chunk for every ladder (each a single device program)."""
         for ladder in self._ladders.values():
             ladder.step(n_ticks)
+
+    # -- watchpoints & post-mortems -------------------------------------------
+    def check_watches(self) -> dict[str, list]:
+        """Drain every watch-enabled ladder's accumulators; the merged
+        ``{session_id: [tripped verdicts]}`` across the whole pool.
+        Ladders over networks compiled without watches are skipped."""
+        alerts: dict[str, list] = {}
+        for ladder in self._ladders.values():
+            if ladder.net.static.watches:
+                alerts.update(ladder.check_watches())
+        return alerts
+
+    def quarantine(self, session_id: str, verdicts=()) -> Quarantined:
+        """Evict a tripped tenant with its evidence (final snapshot +
+        flight-recorder window); the route and activity entries drop with
+        it. Survivor lanes are untouched — their masked-lane step never
+        read the quarantined lane's state."""
+        q = self.ladder_of(session_id).quarantine(session_id, verdicts)
+        del self._routes[session_id]
+        self._activity.pop(session_id, None)
+        return q
+
+    def snapshot(self, session_id: str) -> LaneSnapshot:
+        """Non-destructive lane snapshot (tenant keeps serving)."""
+        return self.ladder_of(session_id).snapshot(session_id)
+
+    def flight(self, session_id: str) -> tuple:
+        """The tenant's recorded flight window, oldest first."""
+        return self.ladder_of(session_id).flight(session_id)

@@ -1,0 +1,53 @@
+"""Post-mortem replay — re-run a recorded lane window bit-exactly.
+
+The flight recorder (``LaneScheduler(flight_window=K)``) keeps the last K
+chunk-boundary :class:`~repro.serve.LaneSnapshot`\\ s per tenant; when a
+watchpoint trips and the tenant is quarantined, those snapshots are the
+evidence. :func:`replay` turns one of them back into a live solo
+:class:`~repro.serve.Session` and advances it — and because lane
+snapshots carry everything the chunking guarantee needs (state pytree,
+counter-keyed generator base, absolute tick cursor), the replay
+reproduces the in-fleet window *bit for bit*: same spikes, same plastic
+weights, same final state as the lane produced live (asserted across the
+propagation×backend×dtype matrix in ``tests/test_watch.py``). Replays
+can therefore be run with richer instrumentation than production ever
+paid for — ``record="raster"`` for the full [T, N] spike picture, or a
+tighter watch set on a re-compiled twin network.
+"""
+from __future__ import annotations
+
+from repro import obs
+from repro.core.engine import Engine
+from repro.core.network import CompiledNetwork
+from repro.serve.scheduler import LaneSnapshot
+from repro.serve.session import Session
+
+__all__ = ["replay"]
+
+
+def replay(net: CompiledNetwork | Engine, snap: LaneSnapshot,
+           n_ticks: int, *, record: str = "raster", **kw):
+    """Re-run ``n_ticks`` from a recorded snapshot; ``(session, outputs)``.
+
+    ``net`` must be the same compiled network the snapshot came from (or
+    an :class:`Engine` over it) — the snapshot's state pytree is written
+    back verbatim, so a different compilation would be a shape error at
+    best and silent nonsense at worst. ``record`` defaults to
+    ``"raster"``: a post-mortem usually wants the full spike picture the
+    serving fleet never materialized. Extra keyword arguments pass
+    through to :meth:`Session.run` (``events=...`` streams, engine
+    overrides).
+
+    The replayed window is bit-identical to what the lane computed live:
+    the stimulus stream is counter-keyed off ``(snap.gen_key,
+    absolute tick)`` and the state carries the delay-ring phase and
+    plasticity traces, so tick ``snap.ticks + i`` here IS tick
+    ``snap.ticks + i`` there.
+    """
+    session = Session.from_snapshot(net, snap)
+    with obs.span("replay", session=snap.session_id,
+                  from_tick=snap.ticks, n_ticks=n_ticks):
+        out = session.run(n_ticks, record=record, **kw)
+    obs.event("replay", session=snap.session_id, from_tick=snap.ticks,
+              n_ticks=n_ticks, record=record)
+    return session, out

@@ -58,22 +58,25 @@ from __future__ import annotations
 
 import dataclasses
 import zlib
+from collections import deque
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import obs
 from repro.core.distributed import _SHARD_MAP_NOCHECK, shard_map
 from repro.core.engine import _run_impl
+from repro.obs import watch as wat
 from repro.obs.metrics import us_per_tick
 from repro.core.network import CompiledNetwork, NetState
 from repro.precision.policy import tree_bytes
 from repro.telemetry import monitors as tel
 
-__all__ = ["LaneScheduler", "LaneSnapshot", "Evicted"]
+__all__ = ["LaneScheduler", "LaneSnapshot", "Evicted", "Quarantined"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +118,19 @@ class LaneSnapshot(NamedTuple):
     ticks_since_flush: int
 
 
+class Quarantined(NamedTuple):
+    """What :meth:`LaneScheduler.quarantine` hands back — the evidence
+    bundle for a tripped tenant: its no-flush snapshot (bit-exactly
+    resumable/replayable), the tripped watch verdicts, and its
+    flight-recorder window (the last K chunk-boundary snapshots). Persist
+    it with ``serve.lifecycle.dump_quarantine``."""
+
+    session_id: str
+    snapshot: LaneSnapshot
+    verdicts: tuple  # WatchVerdict records that triggered the quarantine
+    recording: tuple  # last-K chunk-boundary LaneSnapshots (oldest first)
+
+
 def _stack(tree, n: int):
     return jax.tree.map(lambda x: jnp.stack([x] * n), tree)
 
@@ -146,9 +162,13 @@ class LaneScheduler:
 
     def __init__(self, net: CompiledNetwork, capacity: int, *,
                  record: str = "monitors", mesh: Mesh | None = None,
-                 mesh_axis: str = "lanes", ledger_key: str | None = None):
+                 mesh_axis: str = "lanes", ledger_key: str | None = None,
+                 flight_window: int = 0):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if flight_window < 0:
+            raise ValueError(
+                f"flight_window must be >= 0, got {flight_window}")
         if record not in ("monitors", "none"):
             raise ValueError(
                 f"record must be 'monitors' or 'none', got {record!r} — "
@@ -181,6 +201,15 @@ class LaneScheduler:
         self.active = jnp.zeros((capacity,), bool)
         self._tel = (_stack(tel.init_carry(net.static, 1), capacity)
                      if record == "monitors" else ())
+        # Watchpoint accumulators (compiled via compile(watches=...)): one
+        # carry per lane, threaded through every chunk; drained host-side
+        # by check_watches() at flush cadence.
+        self._watch = (_stack(wat.init_carry(net.static), capacity)
+                       if net.static.watches else ())
+        # Flight recorder: last-K chunk-boundary snapshots per session
+        # (bounded ring, captured after every step when flight_window > 0).
+        self.flight_window = int(flight_window)
+        self._flight: dict[str, deque] = {}
         self._lanes: list[_LaneInfo | None] = [None] * capacity
         self._ticks_since_flush = [0] * capacity
         # Ledger: the serving deployment's footprint — per-lane replicated
@@ -189,7 +218,8 @@ class LaneScheduler:
         # the names so a capacity ladder reports bytes per rung.
         suffix = f".{ledger_key}" if ledger_key else ""
         self._ledger_names = (f"serve.lanes{suffix}",
-                              f"serve.telemetry{suffix}")
+                              f"serve.telemetry{suffix}",
+                              f"serve.watch{suffix}")
         # The label the obs plane files this scheduler's series under:
         # the ledger key when namespaced (a ladder rung), else the bare
         # capacity — stable across the scheduler's lifetime.
@@ -200,6 +230,8 @@ class LaneScheduler:
             net.ledger.register(self._ledger_names[0], self.states)
             if self._tel:
                 net.ledger.register(self._ledger_names[1], self._tel)
+            if self._watch:
+                net.ledger.register(self._ledger_names[2], self._watch)
         if obs.enabled():
             self._obs_occupancy()
 
@@ -241,8 +273,9 @@ class LaneScheduler:
     @property
     def session_bytes(self) -> int:
         """Device bytes one admitted session costs: its lane's replicated
-        NetState slice plus its telemetry accumulators."""
-        return (tree_bytes(self.states) + tree_bytes(self._tel)) // self.capacity
+        NetState slice plus its telemetry and watch accumulators."""
+        return (tree_bytes(self.states) + tree_bytes(self._tel)
+                + tree_bytes(self._watch)) // self.capacity
 
     def lane_of(self, session_id: str) -> int:
         for i, s in enumerate(self._lanes):
@@ -307,6 +340,7 @@ class LaneScheduler:
         self.gen_keys = _write_lane(self.gen_keys, lane, key)
         self.active = self.active.at[lane].set(True)
         self._zero_lane_tel(lane)
+        self._reset_lane_watch(lane)
         self._lanes[lane] = _LaneInfo(session_id=session_id,
                                       ticks=int(state.t))
         self._ticks_since_flush[lane] = 0
@@ -320,6 +354,14 @@ class LaneScheduler:
             self._tel = _write_lane(
                 self._tel, lane,
                 jax.tree.map(jnp.zeros_like, _read_lane(self._tel, lane)))
+
+    def _reset_lane_watch(self, lane: int) -> None:
+        """Fresh watch accumulators for one lane — init values, not zeros
+        (WeightDrift's norm slot is a *level* seeded from the compile-time
+        baseline). Same recycled-slot hygiene rationale as telemetry."""
+        if self._watch:
+            self._watch = _write_lane(self._watch, lane,
+                                      wat.init_carry(self.net.static))
 
     def evict(self, session_id: str) -> Evicted:
         """Remove a session; returns its live ``NetState``, its stimulus
@@ -338,12 +380,36 @@ class LaneScheduler:
             final = self.flush(session_id) if self._tel else None
             self.active = self.active.at[lane].set(False)
             self._lanes[lane] = None
+            self._flight.pop(session_id, None)
         if obs.enabled():
             obs.inc("repro_serve_evicts_total", rung=self._obs_rung)
             self._obs_occupancy()
         return Evicted(state=state, gen_key=gen_key, flush=final)
 
     # -- migration ------------------------------------------------------------
+    def snapshot(self, session_id: str) -> LaneSnapshot:
+        """Read a session's :class:`LaneSnapshot` WITHOUT vacating the lane
+        — the flight recorder's non-destructive capture. Carries the same
+        payload as :meth:`export` (state, stimulus key, raw cumulative
+        telemetry, flush counters), so a recorded snapshot replays or
+        restores exactly like an exported one."""
+        lane = self.lane_of(session_id)
+        tel_lane = None
+        if self._tel:
+            raw = _read_lane(self._tel, lane)
+            tel_lane = tuple(
+                c if isinstance(s, tel.CUMULATIVE) else ()
+                for s, c in zip(self.net.static.monitors, raw)
+            )
+        return LaneSnapshot(
+            session_id=session_id,
+            state=_read_lane(self.states, lane),
+            gen_key=self.gen_keys[lane],
+            tel=tel_lane,
+            ticks=self._lanes[lane].ticks,
+            ticks_since_flush=self._ticks_since_flush[lane],
+        )
+
     def export(self, session_id: str) -> LaneSnapshot:
         """Slice a session out WITHOUT flushing — the migration payload.
 
@@ -357,21 +423,7 @@ class LaneScheduler:
         """
         with obs.span("export", rung=self._obs_rung, session=session_id):
             lane = self.lane_of(session_id)
-            tel_lane = None
-            if self._tel:
-                raw = _read_lane(self._tel, lane)
-                tel_lane = tuple(
-                    c if isinstance(s, tel.CUMULATIVE) else ()
-                    for s, c in zip(self.net.static.monitors, raw)
-                )
-            snap = LaneSnapshot(
-                session_id=session_id,
-                state=_read_lane(self.states, lane),
-                gen_key=self.gen_keys[lane],
-                tel=tel_lane,
-                ticks=self._lanes[lane].ticks,
-                ticks_since_flush=self._ticks_since_flush[lane],
-            )
+            snap = self.snapshot(session_id)
             self.active = self.active.at[lane].set(False)
             self._lanes[lane] = None
         if obs.enabled():
@@ -432,25 +484,54 @@ class LaneScheduler:
                 rung=self._obs_rung)
 
     def _step_impl(self, n_ticks: int) -> None:
-        tel_in = (self._chunk_tel(n_ticks),) if self._tel else ()
+        tel_in = self._chunk_tel(n_ticks) if self._tel else None
+        watch_in = self._watch if self._watch else None
         if self.mesh is None:
             out = _step_lanes(self.static, self.net.params, self.states,
                               self.gen_keys, self.active, n_ticks,
-                              self.record, *tel_in)
+                              self.record, tel_carry=tel_in,
+                              watch_carry=watch_in)
         else:
             out = _step_lanes_sharded(self.static, self.net.params,
                                       self.states, self.gen_keys,
                                       self.active, n_ticks, self.record,
-                                      self.mesh, self.mesh_axis, *tel_in)
+                                      self.mesh, self.mesh_axis,
+                                      tel_carry=tel_in, watch_carry=watch_in)
+        self.states, *rest = out
         if self._tel:
-            self.states, self._tel = out
-        else:
-            self.states = out
+            self._tel = rest[0]
+        if self._watch:
+            self._watch = rest[-1]
         for i, info in enumerate(self._lanes):
             if info is not None:
                 self._lanes[i] = dataclasses.replace(
                     info, ticks=info.ticks + n_ticks)
                 self._ticks_since_flush[i] += n_ticks
+        if self.flight_window:
+            self._record_flight()
+
+    def _record_flight(self) -> None:
+        """Capture every occupied lane's chunk-boundary snapshot into its
+        bounded ring (``deque(maxlen=flight_window)`` — the last K chunk
+        boundaries per session, oldest evicted first)."""
+        for info in self._lanes:
+            if info is None:
+                continue
+            ring = self._flight.get(info.session_id)
+            if ring is None:
+                ring = self._flight[info.session_id] = deque(
+                    maxlen=self.flight_window)
+            ring.append(self.snapshot(info.session_id))
+        if obs.enabled() and self.occupancy:
+            obs.event("flight_record", rung=self._obs_rung,
+                      sessions=self.occupancy, window=self.flight_window)
+            obs.inc("repro_flight_records_total", float(self.occupancy),
+                    rung=self._obs_rung)
+
+    def flight(self, session_id: str) -> tuple[LaneSnapshot, ...]:
+        """The session's recorded flight window, oldest first (empty when
+        the recorder is off or no chunk boundary has passed yet)."""
+        return tuple(self._flight.get(session_id, ()))
 
     def _chunk_tel(self, n_ticks: int) -> tuple:
         """Per-step telemetry carry: cumulative slots persist (batched),
@@ -484,68 +565,119 @@ class LaneScheduler:
         return {s.session_id: self.flush(s.session_id)
                 for s in self._lanes if s is not None}
 
+    # -- watchpoints ----------------------------------------------------------
+    def check_watches(self) -> dict[str, list]:
+        """Drain every occupied lane's watch accumulators and return the
+        TRIPPED verdicts by session id (sessions with no trips are
+        omitted). Tripped verdicts are published to the obs plane
+        (``watch_trip`` events + ``repro_watch_trips_total``). Runs at
+        flush cadence — one device→host fetch for the whole fleet, then a
+        cheap numpy pass per lane; the drained windows restart on device.
+        """
+        if not self._watch:
+            raise ValueError(
+                "network compiled without watches — pass watches=... "
+                "(e.g. 'default') to compile()")
+        host = jax.tree.map(np.asarray, self._watch)
+        alerts: dict[str, list] = {}
+        for lane, info in enumerate(self._lanes):
+            if info is None:
+                continue
+            lane_carry = jax.tree.map(lambda b: b[lane], host)
+            verdicts, reset = wat.drain(self.net.static, lane_carry)
+            self._watch = _write_lane(self._watch, lane, reset)
+            tripped = wat.alert(verdicts, rung=self._obs_rung,
+                                session=info.session_id)
+            if tripped:
+                alerts[info.session_id] = tripped
+        return alerts
+
+    def quarantine(self, session_id: str, verdicts=()) -> Quarantined:
+        """Evict a tripped tenant WITH its evidence: the no-flush
+        :class:`LaneSnapshot` (bit-exactly replayable), the verdicts that
+        tripped, and its flight-recorder window. The lane is vacated —
+        surviving lanes are untouched (their state never left the device).
+        Persist the bundle with ``serve.lifecycle.dump_quarantine``."""
+        recording = tuple(self._flight.pop(session_id, ()))
+        snap = self.export(session_id)
+        if obs.enabled():
+            obs.event("quarantine", rung=self._obs_rung, session=session_id,
+                      watches=",".join(v.watch for v in verdicts),
+                      recorded=len(recording))
+            obs.inc("repro_quarantines_total", rung=self._obs_rung)
+        return Quarantined(session_id=session_id, snapshot=snap,
+                           verdicts=tuple(verdicts), recording=recording)
+
 
 def _lanes_vmap(static, params, states, gen_keys, active, n_ticks, record,
-                tel_carry):
+                tel_carry, watch_carry):
     """One chunk for every lane in the given batched pytrees: vmap of the
     engine's ``_run_impl`` over (state, gen stream, active flag, telemetry
-    carry). Shared by the single-device jit and the shard_map per-device
-    body — per-lane arithmetic is identical either way, which is the whole
-    sharded-parity story. Only carries come back — per-chunk outputs
-    (telemetry dicts the caller didn't ask for) are dead code the jit
-    eliminates."""
+    + watch carries). Shared by the single-device jit and the shard_map
+    per-device body — per-lane arithmetic is identical either way, which
+    is the whole sharded-parity story. Only carries come back — per-chunk
+    outputs (telemetry dicts the caller didn't ask for) are dead code the
+    jit eliminates. Returns a tuple ``(states[, tel][, watch])`` whose
+    arity is decided by ``record`` and ``static.watches``."""
+    want_mon = record == "monitors"
+    want_watch = bool(static.watches)
 
-    def one(state, key, act, tc):
+    def one(state, key, act, *carries):
+        tc = carries[0] if want_mon else None
+        wc = carries[-1] if want_watch else None
         final, out = _run_impl(
             static, params, state, n_ticks, record=record,
             gen_base=key, active=act,
-            tel_carry=tc if record == "monitors" else None,
-            return_tel_carry=record == "monitors")
-        if record == "monitors":
-            return final, out["tel_carry"]
-        return final
+            tel_carry=tc, return_tel_carry=want_mon,
+            watch_carry=wc)
+        res = [final]
+        if want_mon:
+            res.append(out["tel_carry"])
+        if want_watch:
+            res.append(out["watch_carry"])
+        return tuple(res)
 
-    if record == "monitors":
-        return jax.vmap(one)(states, gen_keys, active, tel_carry)
-    return jax.vmap(lambda s, k, a: one(s, k, a, None))(
-        states, gen_keys, active)
+    extras = (() if not want_mon else (tel_carry,)) + (
+        () if not want_watch else (watch_carry,))
+    return jax.vmap(one)(states, gen_keys, active, *extras)
 
 
 @partial(jax.jit, static_argnames=("static", "n_ticks", "record"))
 def _step_lanes(static, params, states, gen_keys, active, n_ticks, record,
-                tel_carry=None):
+                tel_carry=None, watch_carry=None):
     return _lanes_vmap(static, params, states, gen_keys, active, n_ticks,
-                       record, tel_carry)
+                       record, tel_carry, watch_carry)
 
 
 @partial(jax.jit, static_argnames=("static", "n_ticks", "record", "mesh",
                                    "mesh_axis"))
 def _step_lanes_sharded(static, params, states, gen_keys, active, n_ticks,
-                        record, mesh, mesh_axis, tel_carry=None):
+                        record, mesh, mesh_axis, tel_carry=None,
+                        watch_carry=None):
     """The mesh-sharded step: shard_map partitions every per-lane pytree on
     its leading (lane) axis; ``params`` stays replicated. Each device runs
     the same vmapped body over its lane block — no collective appears
     anywhere (lanes never interact), so the only cross-device traffic is
     the initial resharding of freshly-admitted lane state. Typed PRNG key
     arrays shard like any other leaf (PartitionSpec applies to the visible
-    shape)."""
+    shape). The watch carry shards on the lane axis like telemetry."""
     lane = P(mesh_axis)
-    if record == "monitors":
-        fn = shard_map(
-            lambda p, s, k, a, t: _lanes_vmap(static, p, s, k, a, n_ticks,
-                                              record, t),
-            mesh=mesh,
-            in_specs=(P(), lane, lane, lane, lane),
-            out_specs=(lane, lane),
-            **_SHARD_MAP_NOCHECK,
-        )
-        return fn(params, states, gen_keys, active, tel_carry)
+    want_mon = record == "monitors"
+    want_watch = bool(static.watches)
+    extras = (() if not want_mon else (tel_carry,)) + (
+        () if not want_watch else (watch_carry,))
+    n_out = 1 + len(extras)
+
+    def body(p, s, k, a, *ex):
+        tc = ex[0] if want_mon else None
+        wc = ex[-1] if want_watch else None
+        return _lanes_vmap(static, p, s, k, a, n_ticks, record, tc, wc)
+
     fn = shard_map(
-        lambda p, s, k, a: _lanes_vmap(static, p, s, k, a, n_ticks, record,
-                                       None),
+        body,
         mesh=mesh,
-        in_specs=(P(), lane, lane, lane),
-        out_specs=lane,
+        in_specs=(P(),) + (lane,) * (3 + len(extras)),
+        out_specs=(lane,) * n_out,
         **_SHARD_MAP_NOCHECK,
     )
-    return fn(params, states, gen_keys, active)
+    return fn(params, states, gen_keys, active, *extras)

@@ -36,6 +36,7 @@ import numpy as np
 from repro import obs
 from repro.core.engine import Engine
 from repro.core.network import CompiledNetwork, NetState
+from repro.obs import watch as wat
 from repro.obs.metrics import us_per_tick
 from repro.telemetry import monitors as tel
 
@@ -111,6 +112,10 @@ class Session:
     state: NetState
     monitors: SessionMonitors | None
     ticks: int = 0  # host mirror of state.t (ticks served so far)
+    # Raw in-scan watchpoint accumulators (networks compiled with
+    # watches=...); threaded through every run() and drained host-side by
+    # check_watches(). None until the first chunk runs.
+    watch_carry: tuple | None = None
 
     @classmethod
     def create(
@@ -170,6 +175,9 @@ class Session:
                     "network) cannot record='monitors'")
             kw["tel_carry"] = self.monitors.chunk_carry(n_ticks)
             kw["return_tel_carry"] = True
+        want_watch = bool(self.engine.net.static.watches)
+        if want_watch and self.watch_carry is not None:
+            kw["watch_carry"] = self.watch_carry
         with obs.span("step_chunk", scope="session", n_ticks=n_ticks,
                       record=record) as sp:
             self.state, out = self.engine.run(
@@ -183,8 +191,26 @@ class Session:
                         scope="session", rung="solo")
         if want_mon:
             self.monitors.absorb(out.pop("tel_carry"), n_ticks)
+        if want_watch:
+            self.watch_carry = out.pop("watch_carry")
         self.ticks += n_ticks
         return out
+
+    def check_watches(self) -> list:
+        """Drain the session's watch accumulators: returns ALL verdicts
+        (tripped or not); tripped ones are published to the obs plane
+        (``watch_trip`` events + counters, rung="solo"). The drained
+        window restarts. Empty list until a chunk has run."""
+        if not self.engine.net.static.watches:
+            raise ValueError(
+                "network compiled without watches — pass watches=... "
+                "(e.g. 'default') to compile()")
+        if self.watch_carry is None:
+            return []
+        verdicts, self.watch_carry = wat.drain(
+            self.engine.net.static, self.watch_carry)
+        wat.alert(verdicts, rung="solo")
+        return verdicts
 
     def flush(self) -> dict:
         """Shorthand for ``self.monitors.flush()``."""

@@ -1,0 +1,508 @@
+"""In-scan watchpoints, flight recorder, quarantine, and replay
+(`repro.obs.watch` + the serve plane's alerting surface).
+
+The load-bearing claims, asserted as equality (never tolerance):
+
+* **Watches are free of numerical consequence** — a network compiled with
+  watches produces bit-identical rasters, weights, and state to the same
+  network compiled without, across propagation × backend × dtype,
+  plastic and homeostatic included. The accumulators ride the scan carry
+  (O(1) memory) and drain only at chunk boundaries.
+* **Detection works where it matters** — a deliberately NaN-poisoned
+  fp16 lane trips `nonfinite` within ONE chunk, is quarantined with its
+  evidence, and the surviving tenants are bitwise equal to a fleet that
+  was never poisoned at all.
+* **The flight recorder replays bit-exactly** — any recorded
+  chunk-boundary snapshot re-run solo reproduces the lane's subsequent
+  window down to the last state leaf.
+* **Evidence retention is bounded** — quarantine dumps rotate under
+  count/byte caps with typed errors, and every dumped snapshot restores.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serve
+from repro.configs.synfire4 import CHAIN_STDP, SYNFIRE4_MINI, build_synfire
+from repro.core.engine import Engine
+from repro.core.plasticity import HomeostasisConfig
+from repro.obs import watch as wat
+from repro.obs.health import PASS, WARN, watch_check
+from repro.obs.metrics import MetricsRegistry
+from repro.serve.scheduler import _write_lane
+
+MODES = [("packed", "xla"), ("sparse", "xla"), ("auto", "xla"),
+         ("packed", "fused"), ("sparse", "fused"), ("auto", "fused")]
+
+HOMEO = HomeostasisConfig(target_hz=8.0, tau_avg_ms=500.0, beta=1.0)
+
+# Sustained stimulus keeps the chain spiking so plasticity and the rate
+# accumulators keep moving — a watch bug can't hide behind silence.
+DRIVEN = dataclasses.replace(SYNFIRE4_MINI, stim_rate_hz=60.0)
+
+
+def _mini(policy, prop, backend, *, plastic=False, homeo=False,
+          watches=None):
+    return build_synfire(
+        DRIVEN, policy=policy, propagation=prop, backend=backend,
+        stdp_chain=CHAIN_STDP if plastic else None,
+        homeo_chain=HOMEO if (plastic and homeo) else None,
+        homeostasis_period=40 if (plastic and homeo) else 0,
+        watches=watches,
+    )
+
+
+def _dekey(tree):
+    return jax.tree.map(
+        lambda x: jax.random.key_data(x)
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype,
+                                                  jax.dtypes.prng_key)
+        else x, tree)
+
+
+def _assert_tree_eq(a, b, what="state"):
+    fa, fb = jax.tree.leaves(_dekey(a)), jax.tree.leaves(_dekey(b))
+    assert len(fa) == len(fb)
+    for i, (x, y) in enumerate(zip(fa, fb)):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes(), \
+            f"{what}: leaf {i} differs"
+
+
+def _poison(sched, session_id, neuron=40):
+    """NaN the tenant's membrane potential in place (lane surgery)."""
+    lane = sched.lane_of(session_id)
+    st = jax.tree.map(lambda x: x[lane], sched.states)
+    v = st.neurons.v.at[neuron].set(st.neurons.v.dtype.type(jnp.nan))
+    st = st._replace(neurons=st.neurons._replace(v=v))
+    sched.states = _write_lane(sched.states, lane, st)
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution & validation
+# ---------------------------------------------------------------------------
+
+class TestResolve:
+    def test_default_set(self):
+        specs = wat.resolve("default", n=10, n_projections=2)
+        assert tuple(s.name for s in specs) == ("nonfinite", "rate_band",
+                                                "silent")
+
+    def test_none_is_empty(self):
+        assert wat.resolve(None, n=10, n_projections=2) == ()
+
+    def test_single_spec_wraps(self):
+        specs = wat.resolve(wat.Silent(window=10), n=10, n_projections=2)
+        assert len(specs) == 1
+
+    def test_duplicate_names_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            wat.resolve((wat.Silent(), wat.Silent()), n=10, n_projections=2)
+
+    def test_bad_params_rejected(self):
+        with pytest.raises(ValueError):
+            wat.resolve(wat.NonFinite(weight_stride=0), n=10,
+                        n_projections=2)
+        with pytest.raises(ValueError):
+            wat.resolve(wat.RateBand(lo_hz=50.0, hi_hz=10.0), n=10,
+                        n_projections=2)
+        with pytest.raises(ValueError):
+            wat.resolve(wat.WeightDrift(limit=0.0), n=10, n_projections=2)
+        with pytest.raises(ValueError):
+            wat.resolve(wat.Silent(window=0), n=10, n_projections=2)
+
+    def test_drift_baseline_length_must_match(self):
+        with pytest.raises(ValueError, match="baseline"):
+            wat.resolve(wat.WeightDrift(), n=10, n_projections=2,
+                        baseline_norms=(1.0,))
+
+    def test_unknown_string_rejected(self):
+        with pytest.raises(ValueError):
+            wat.resolve("everything", n=10, n_projections=2)
+
+    def test_compile_fills_drift_baseline(self):
+        net = _mini("fp32", "packed", "xla",
+                    watches=(wat.WeightDrift(limit=0.5),))
+        (spec,) = net.static.watches
+        assert len(spec.baseline) == len(net.state0.weights)
+        assert all(b > 0 for b in spec.baseline)
+
+
+# ---------------------------------------------------------------------------
+# Drain semantics on synthetic carries (no simulation needed)
+# ---------------------------------------------------------------------------
+
+class TestDrain:
+    def _net(self, watches):
+        return _mini("fp32", "packed", "xla", watches=watches)
+
+    def test_nonfinite_trips_and_resets(self):
+        net = self._net((wat.NonFinite(),))
+        carry = ((np.int32(3), np.int32(0)),)
+        verdicts, reset = wat.drain(net.static, carry)
+        (v,) = verdicts
+        assert v.watch == "nonfinite" and v.tripped and v.value == 3.0
+        assert np.asarray(reset[0][0]) == 0  # window restarts clean
+
+    def test_rate_band_high_trips(self):
+        net = self._net((wat.RateBand(lo_hz=0.0, hi_hz=20.0),))
+        n = net.n_neurons
+        # every neuron spiked every tick for 100 ticks -> 1000 Hz >> 20
+        carry = ((np.full(n, 100, np.int32), np.int32(100)),)
+        verdicts, reset = wat.drain(net.static, carry)
+        (v,) = verdicts
+        assert v.tripped and v.value > 20.0
+        assert int(np.asarray(reset[0][1])) == 0  # tick window resets
+
+    def test_silent_trips_at_window(self):
+        net = self._net((wat.Silent(window=50),))
+        carry = ((np.int32(60), np.int32(60)),)
+        verdicts, reset = wat.drain(net.static, carry)
+        (v,) = verdicts
+        assert v.tripped and v.value == 60.0
+        # the running silence streak survives the drain (it is a level)
+        assert int(np.asarray(reset[0][0])) == 60
+
+    def test_untripped_verdicts_are_reported_too(self):
+        net = self._net("default")
+        verdicts, _ = wat.drain(net.static, wat.init_carry(net.static))
+        assert len(verdicts) >= 3
+        assert not any(v.tripped for v in verdicts)
+        d = verdicts[0].as_dict()
+        assert {"watch", "kind", "tripped", "value", "limit"} <= set(d)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise parity: watches must be free of numerical consequence
+# ---------------------------------------------------------------------------
+
+def _parity(policy, prop, backend, *, plastic, homeo, T=120):
+    base = _mini(policy, prop, backend, plastic=plastic, homeo=homeo)
+    watched = _mini(policy, prop, backend, plastic=plastic, homeo=homeo,
+                    watches="default")
+    s0, o0 = Engine(base).run(T, record="raster")
+    s1, o1 = Engine(watched).run(T, record="raster")
+    wc = o1.pop("watch_carry")
+    assert np.array_equal(np.asarray(o0["spikes"]),
+                          np.asarray(o1["spikes"])), "raster differs"
+    _assert_tree_eq(s0, s1, f"{policy}/{prop}/{backend}")
+    verdicts, _ = wat.drain(watched.static, jax.tree.map(np.asarray, wc))
+    assert not any(v.tripped for v in verdicts if v.watch == "nonfinite")
+
+
+class TestWatchParityFast:
+    def test_fp16_plastic_packed_xla(self):
+        _parity("fp16", "packed", "xla", plastic=True, homeo=False)
+
+    def test_fp32_homeo_sparse_fused(self):
+        _parity("fp32", "sparse", "fused", plastic=True, homeo=True)
+
+
+@pytest.mark.slow
+class TestWatchParityMatrix:
+    @pytest.mark.parametrize("prop,backend", MODES)
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    @pytest.mark.parametrize("plastic,homeo",
+                             [(False, False), (True, False), (True, True)])
+    def test_parity(self, prop, backend, policy, plastic, homeo):
+        _parity(policy, prop, backend, plastic=plastic, homeo=homeo)
+
+
+# ---------------------------------------------------------------------------
+# Solo sessions
+# ---------------------------------------------------------------------------
+
+class TestSessionWatch:
+    def test_check_watches_requires_watches(self):
+        net = _mini("fp32", "packed", "xla")
+        s = serve.Session.create(net)
+        with pytest.raises(ValueError, match="without watches"):
+            s.check_watches()
+
+    def test_check_before_first_chunk_is_empty(self):
+        net = _mini("fp32", "packed", "xla", watches="default")
+        s = serve.Session.create(net)
+        assert s.check_watches() == []
+
+    def test_carry_threads_across_chunks(self):
+        net = _mini("fp32", "packed", "xla",
+                    watches=(wat.RateBand(lo_hz=0.0, hi_hz=1000.0),))
+        s = serve.Session.create(net, seed=5)
+        s.run(40)
+        t1 = int(np.asarray(s.watch_carry[0][1]))
+        s.run(40)
+        t2 = int(np.asarray(s.watch_carry[0][1]))
+        assert (t1, t2) == (40, 80)  # accumulates, never resets mid-run
+        verdicts = s.check_watches()
+        assert len(verdicts) == 1
+        assert int(np.asarray(s.watch_carry[0][1])) == 0  # drained
+
+
+# ---------------------------------------------------------------------------
+# Fleet detection + quarantine: survivors must not notice
+# ---------------------------------------------------------------------------
+
+class TestDetectionAndQuarantine:
+    CHUNK = 40
+    TENANTS = 4
+
+    def _fleet(self, net, flight_window=0):
+        sched = serve.LaneScheduler(net, self.TENANTS,
+                                    flight_window=flight_window)
+        for i in range(self.TENANTS):
+            sched.admit(f"t{i}", seed=i)
+        return sched
+
+    def test_poisoned_fp16_lane_detected_within_one_chunk(self):
+        net = _mini("fp16", "packed", "xla", watches="default")
+        live = self._fleet(net, flight_window=2)
+        clean = self._fleet(net)
+        for _ in range(2):
+            live.step(self.CHUNK)
+            clean.step(self.CHUNK)
+        assert live.check_watches() == {}
+
+        _poison(live, "t1")
+        live.step(self.CHUNK)  # ONE chunk with the poison in place
+        clean.step(self.CHUNK)
+
+        alerts = live.check_watches()
+        assert set(alerts) == {"t1"}
+        assert any(v.watch == "nonfinite" and v.tripped
+                   for v in alerts["t1"])
+
+        q = live.quarantine("t1", alerts["t1"])
+        assert q.session_id == "t1" and len(q.recording) == 2
+        assert live.session_ids == ["t0", "t2", "t3"]
+
+        # Survivors are bitwise equal to the never-poisoned fleet: the
+        # poisoned lane's NaNs never leaked across the vmap lane axis,
+        # and the quarantine itself touched nothing but t1's lane.
+        for sid in ("t0", "t2", "t3"):
+            _assert_tree_eq(live.snapshot(sid).state,
+                            clean.snapshot(sid).state, sid)
+        live.step(self.CHUNK)
+        clean.step(self.CHUNK)
+        for sid in ("t0", "t2", "t3"):
+            _assert_tree_eq(live.snapshot(sid).state,
+                            clean.snapshot(sid).state, f"{sid} post")
+        assert live.check_watches() == {}  # the fleet is healthy again
+
+    def test_pool_routes_quarantine(self):
+        net = _mini("fp16", "packed", "xla", watches="default")
+        pool = serve.ServePool(rungs=(2, 4), flight_window=2)
+        for i in range(3):
+            pool.admit(net, f"t{i}", seed=i)
+        pool.step(self.CHUNK)
+        _poison(pool.ladder_of("t1").scheduler, "t1")
+        pool.step(self.CHUNK)
+        alerts = pool.check_watches()
+        assert set(alerts) == {"t1"}
+        q = pool.quarantine("t1", alerts["t1"])
+        assert "t1" not in pool.session_ids
+        assert q.verdicts and q.verdicts[0].watch == "nonfinite"
+
+    def test_check_watches_requires_watches(self):
+        net = _mini("fp16", "packed", "xla")
+        sched = serve.LaneScheduler(net, 2)
+        with pytest.raises(ValueError, match="without watches"):
+            sched.check_watches()
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder: bounded ring, bit-exact replay
+# ---------------------------------------------------------------------------
+
+def _replay_roundtrip(policy, prop, backend, *, plastic, chunk=40,
+                      window=3, chunks=5):
+    net = _mini(policy, prop, backend, plastic=plastic, watches="default")
+    sched = serve.LaneScheduler(net, 2, flight_window=window)
+    sched.admit("a", seed=1)
+    sched.admit("b", seed=2)
+    for _ in range(chunks):
+        sched.step(chunk)
+
+    ring = sched.flight("a")
+    assert len(ring) == window  # bounded: oldest fell off
+    assert [s.ticks for s in ring] == \
+        [chunk * (chunks - window + 1 + i) for i in range(window)]
+
+    # Replay the oldest recorded snapshot across the remaining window and
+    # land exactly on the newest one — state, weights, telemetry carry
+    # (record="both": the raster post-mortem AND the telemetry stream).
+    span = ring[-1].ticks - ring[0].ticks
+    session, _ = serve.replay(net, ring[0], span, record="both")
+    _assert_tree_eq(session.state, ring[-1].state,
+                    f"replay {policy}/{prop}/{backend}")
+    if session.monitors is not None and ring[-1].tel is not None:
+        _assert_tree_eq(session.monitors.carry, ring[-1].tel, "replay tel")
+        assert session.monitors.ticks_since_flush == \
+            ring[-1].ticks_since_flush
+
+
+class TestFlightRecorder:
+    def test_disabled_by_default(self):
+        net = _mini("fp16", "packed", "xla", watches="default")
+        sched = serve.LaneScheduler(net, 2)
+        sched.admit("a")
+        sched.step(20)
+        assert sched.flight("a") == ()
+
+    def test_negative_window_rejected(self):
+        net = _mini("fp16", "packed", "xla")
+        with pytest.raises(ValueError):
+            serve.LaneScheduler(net, 2, flight_window=-1)
+
+    def test_ring_replays_bit_exactly_fast(self):
+        _replay_roundtrip("fp16", "packed", "xla", plastic=True)
+
+    def test_ring_survives_rung_migration(self):
+        net = _mini("fp16", "packed", "xla", watches="default")
+        lad = serve.CapacityLadder(net, rungs=(1, 4), idle_after=1,
+                                   flight_window=2)
+        lad.admit("a")
+        lad.step(40)
+        lad.admit("b")  # up-rung 1 -> 4
+        lad.step(40)
+        ring = lad.flight("a")
+        assert [s.ticks for s in ring] == [40, 80]
+        span = ring[-1].ticks - ring[0].ticks
+        session, _ = serve.replay(net, ring[0], span)
+        _assert_tree_eq(session.state, ring[-1].state, "post-migration")
+
+
+@pytest.mark.slow
+class TestFlightReplayMatrix:
+    @pytest.mark.parametrize("prop,backend", MODES)
+    @pytest.mark.parametrize("policy", ["fp32", "fp16"])
+    @pytest.mark.parametrize("plastic", [False, True])
+    def test_replay(self, prop, backend, policy, plastic):
+        _replay_roundtrip(policy, prop, backend, plastic=plastic)
+
+
+# ---------------------------------------------------------------------------
+# Quarantine dumps: persistence, replayability, bounded retention
+# ---------------------------------------------------------------------------
+
+class TestRetention:
+    def _quarantined(self, net, tmp, *, poison=True):
+        sched = serve.LaneScheduler(net, 2, flight_window=2)
+        sched.admit("bad", seed=7)
+        sched.admit("ok", seed=8)
+        for _ in range(2):
+            sched.step(40)
+        if poison:
+            _poison(sched, "bad")
+        sched.step(40)
+        alerts = sched.check_watches()
+        return sched.quarantine("bad", alerts.get("bad", ()))
+
+    def test_dump_manifest_and_restore(self, tmp_path):
+        net = _mini("fp16", "packed", "xla", watches="default")
+        q = self._quarantined(net, tmp_path)
+        ddir = serve.dump_quarantine(str(tmp_path), q)
+        man = json.load(open(os.path.join(ddir, "manifest.json")))
+        assert man["session_id"] == "bad"
+        assert len(man["flight"]) == 2
+        assert any(v["watch"] == "nonfinite" and v["tripped"]
+                   for v in man["verdicts"])
+        # every dumped snapshot is restore_lane-readable, bit-exact
+        snap = serve.restore_lane(os.path.join(ddir, "final"), net)
+        _assert_tree_eq(snap.state, q.snapshot.state, "dumped final")
+        flight0 = serve.restore_lane(
+            os.path.join(ddir, "flight"), net,
+            step=man["flight_ticks"][0])
+        _assert_tree_eq(flight0.state, q.recording[0].state, "dumped ring")
+
+    def test_count_cap_drops_oldest(self, tmp_path):
+        net = _mini("fp16", "packed", "xla", watches="default")
+        q = self._quarantined(net, tmp_path)
+        for k in range(4):
+            serve.dump_quarantine(str(tmp_path),
+                                  q._replace(session_id=f"s{k}"),
+                                  keep_last=2)
+        kept = sorted(os.listdir(tmp_path))
+        assert len(kept) == 2
+        assert all(d.startswith(("s2", "s3")) for d in kept)
+
+    def test_byte_cap_keeps_newest(self, tmp_path):
+        net = _mini("fp16", "packed", "xla", watches="default")
+        q = self._quarantined(net, tmp_path)
+        d0 = serve.dump_quarantine(str(tmp_path), q, keep_last=10)
+        one = sum(os.path.getsize(os.path.join(r, f))
+                  for r, _, fs in os.walk(d0) for f in fs)
+        serve.dump_quarantine(str(tmp_path),
+                              q._replace(session_id="newer"),
+                              keep_last=10, max_bytes=one + one // 2)
+        kept = os.listdir(tmp_path)
+        assert len(kept) == 1 and kept[0].startswith("newer")
+
+    def test_newest_survives_even_over_byte_cap(self, tmp_path):
+        net = _mini("fp16", "packed", "xla", watches="default")
+        q = self._quarantined(net, tmp_path)
+        serve.dump_quarantine(str(tmp_path), q, keep_last=10, max_bytes=1)
+        assert len(os.listdir(tmp_path)) == 1
+
+    def test_typed_errors(self, tmp_path):
+        with pytest.raises(serve.RetentionError):
+            serve.rotate_dumps(str(tmp_path), keep_last=0)
+        with pytest.raises(serve.RetentionError):
+            serve.rotate_dumps(str(tmp_path), keep_last=2, max_bytes=0)
+        f = tmp_path / "not_a_dir"
+        f.write_text("x")
+        with pytest.raises(serve.RetentionError):
+            serve.rotate_dumps(str(f))
+        assert isinstance(serve.RetentionError("x"), serve.CheckpointError)
+
+    def test_rotate_missing_dir_is_noop(self, tmp_path):
+        assert serve.rotate_dumps(str(tmp_path / "nope")) == []
+
+    def test_half_written_dump_is_not_rotations_to_delete(self, tmp_path):
+        crashed = tmp_path / "crashed_dump"
+        crashed.mkdir()
+        (crashed / "final").mkdir()
+        removed = serve.rotate_dumps(str(tmp_path), keep_last=1)
+        assert removed == [] and crashed.exists()
+
+
+# ---------------------------------------------------------------------------
+# Alert plumbing: counters + health verdicts
+# ---------------------------------------------------------------------------
+
+class TestAlertPlumbing:
+    def test_watch_check_absent_until_counters_exist(self):
+        assert watch_check(MetricsRegistry()) is None
+
+    def test_watch_check_warns_on_trips(self):
+        reg = MetricsRegistry()
+        reg.counter("repro_watch_trips_total").inc(watch="nonfinite",
+                                                   rung="cap4")
+        reg.counter("repro_quarantines_total").inc(rung="cap4")
+        hc = watch_check(reg)
+        assert hc.status == WARN and hc.value == 1.0
+        assert "nonfinite=1" in hc.detail and "1 tenant" in hc.detail
+
+    def test_watch_check_passes_when_clean(self):
+        reg = MetricsRegistry()
+        reg.counter("repro_watch_trips_total")  # touched, never tripped
+        hc = watch_check(reg)
+        assert hc.status == PASS and hc.value == 0.0
+
+    def test_alert_emits_only_tripped(self):
+        from repro import obs
+        v_ok = wat.WatchVerdict("silent", "silent", False, 0.0, 500.0, "")
+        v_bad = wat.WatchVerdict("nonfinite", "nonfinite", True, 2.0, 0.0,
+                                 "bad values")
+        before = obs.registry().counter(
+            "repro_watch_trips_total").value(watch="nonfinite",
+                                             rung="test_alert")
+        tripped = wat.alert([v_ok, v_bad], rung="test_alert")
+        assert tripped == [v_bad]
+        after = obs.registry().counter(
+            "repro_watch_trips_total").value(watch="nonfinite",
+                                             rung="test_alert")
+        assert after == before + 1
